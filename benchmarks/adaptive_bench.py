@@ -1,0 +1,27 @@
+"""Paper App. B Q2: adaptive step-size solvers waste NFE on rejections at
+small budgets; fixed-grid DEIS dominates. Sweep tolerances on the adaptive
+rhoRK23 and compare error-at-NFE against tAB-DEIS on the same trained model."""
+from repro.core.adaptive import AdaptiveRK23
+
+from .common import SDE, trained_problem, rmse_to_ref, solve
+
+
+def run(quick: bool = False):
+    _, eps, xT, ref = trained_problem()
+    rows = []
+    tols = [3e-1, 1e-1] if quick else [1.0, 3e-1, 1e-1, 3e-2, 1e-2]
+    for tol in tols:
+        solver = AdaptiveRK23(SDE, rtol=tol, atol=tol)
+        res = solver.solve(eps, xT)
+        rows.append({"table": "appB_Q2_adaptive", "solver": "rhoRK23_adaptive",
+                     "tol": tol, "NFE": res.nfe,
+                     "rejected_steps": res.n_rejected,
+                     "wasted_nfe": 3 * res.n_rejected,
+                     "rmse_to_ref": round(rmse_to_ref(res.x0, ref), 6)})
+    for n in ([10, 20] if quick else [5, 10, 15, 20, 30]):
+        x, nfe = solve(eps, xT, "tab3", n, "quadratic")
+        rows.append({"table": "appB_Q2_adaptive", "solver": "tAB3_fixed",
+                     "tol": None, "NFE": nfe, "rejected_steps": 0,
+                     "wasted_nfe": 0,
+                     "rmse_to_ref": round(rmse_to_ref(x, ref), 6)})
+    return rows

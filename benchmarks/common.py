@@ -1,0 +1,78 @@
+"""Shared benchmark infrastructure: problems, metrics, CSV emission."""
+from __future__ import annotations
+
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import VPSDE, VESDE, get_timesteps, make_solver
+from repro.diffusion.analytic import GMMData, default_gmm
+from repro.diffusion.score_net import train_score_net, TrainedScoreModel
+
+SDE = VPSDE()
+
+
+@functools.lru_cache(maxsize=None)
+def gmm_problem(d: int = 2):
+    """Analytic-score GMM problem: (gmm, eps_fn, x_T, reference x_0)."""
+    gmm = default_gmm(SDE, d=d)
+    eps = gmm.eps_fn()
+    x_T = jax.random.normal(jax.random.PRNGKey(0), (512, d)) * SDE.prior_std()
+    ref = make_solver("rho_rk4", SDE,
+                      get_timesteps(SDE, 500, "log_rho")).sample(eps, x_T)
+    return gmm, eps, x_T, ref
+
+
+@functools.lru_cache(maxsize=None)
+def trained_problem(d: int = 2, steps: int = 1500):
+    """Trained-score problem (real fitting error)."""
+    gmm = default_gmm(SDE, d=d)
+    model = train_score_net(SDE, lambda k, n: gmm.sample_data(k, n), d,
+                            steps=steps, seed=0)
+    eps = model.eps_fn()
+    x_T = jax.random.normal(jax.random.PRNGKey(0), (512, d)) * SDE.prior_std()
+    ref = make_solver("rho_rk4", SDE,
+                      get_timesteps(SDE, 500, "log_rho")).sample(eps, x_T)
+    return gmm, eps, x_T, ref
+
+
+def rmse_to_ref(x, ref) -> float:
+    """Discretization error Delta_p (paper Fig. 3a): same x_T, same model,
+    distance to the (near-)exact ODE solution."""
+    return float(jnp.sqrt(jnp.mean(jnp.square(x - ref))))
+
+
+def sliced_w2(x, y, n_proj: int = 128, seed: int = 0) -> float:
+    """Sliced 2-Wasserstein between sample sets (FID stand-in)."""
+    key = jax.random.PRNGKey(seed)
+    d = x.shape[-1]
+    dirs = jax.random.normal(key, (n_proj, d))
+    dirs = dirs / jnp.linalg.norm(dirs, axis=-1, keepdims=True)
+    px = jnp.sort(x @ dirs.T, axis=0)
+    py = jnp.sort(y @ dirs.T, axis=0)
+    n = min(px.shape[0], py.shape[0])
+    return float(jnp.sqrt(jnp.mean(jnp.square(px[:n] - py[:n]))))
+
+
+def solve(eps, x_T, solver_name: str, nfe_grid: int, schedule: str = "quadratic",
+          t0=None, key=None, **kw):
+    s = make_solver(solver_name, SDE, get_timesteps(SDE, nfe_grid, schedule, t0=t0), **kw)
+    return s.sample(eps, x_T, key), s.nfe
+
+
+def timed(fn, *args, reps: int = 3):
+    fn(*args)  # compile / warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return out, (time.perf_counter() - t0) / reps * 1e6  # us
+
+
+def emit(rows: list[dict], name: str):
+    """Print rows and the required ``name,us_per_call,derived`` CSV line."""
+    for r in rows:
+        print(",".join(f"{k}={v}" for k, v in r.items()))

@@ -1,0 +1,32 @@
+"""DEIS as a serving feature: diffusion-LM sampling throughput vs NFE on a
+reduced backbone -- serving capacity scales ~1/NFE, which is exactly why the
+paper's low-NFE quality matters operationally."""
+import time
+
+import jax
+
+from repro.configs.base import get_config
+from repro.models import transformer as T
+from repro.serving.engine import DiffusionServeEngine, Request
+
+
+def run(quick: bool = False):
+    cfg = get_config("gemma_2b").reduced().with_(objective="diffusion")
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    eng = DiffusionServeEngine(params, cfg)
+    rows = []
+    n_req = 4 if quick else 8
+    for solver, nfe in ([("tab3", 5), ("tab3", 10)] if quick else
+                        [("ddim", 10), ("tab3", 5), ("tab3", 10), ("tab3", 20),
+                         ("rho_heun", 5)]):
+        reqs = [Request(uid=i, seq_len=32, nfe=nfe, solver=solver, seed=i)
+                for i in range(n_req)]
+        eng.serve(reqs)  # warm/compile
+        t0 = time.perf_counter()
+        res = eng.serve(reqs)
+        dt = time.perf_counter() - t0
+        rows.append({"table": "deis_serving", "solver": solver, "NFE": nfe,
+                     "requests": n_req,
+                     "us_per_request": round(dt / n_req * 1e6, 1),
+                     "seq_per_s": round(n_req / dt, 2)})
+    return rows

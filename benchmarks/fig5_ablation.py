@@ -1,0 +1,25 @@
+"""Paper Fig. 5 / Tab. 9: ingredient ablation -- Euler -> +EI -> +eps ->
++polynomial extrapolation -> +optimized timestamps, on a TRAINED score model
+(real fitting error, as in the paper)."""
+from .common import gmm_problem, trained_problem, rmse_to_ref, solve
+
+
+def run(quick: bool = False):
+    _, eps, xT, ref = trained_problem()
+    nfes = [10, 20] if quick else [5, 10, 20, 50]
+    rows = []
+    for n in nfes:
+        variants = [
+            ("euler", dict(solver_name="euler", schedule="uniform")),
+            ("+EI(s_param)", dict(solver_name="naive_ei", schedule="uniform")),
+            ("+eps(DDIM)", dict(solver_name="ddim", schedule="uniform")),
+            ("+poly(tAB3)", dict(solver_name="tab3", schedule="uniform")),
+            ("+opt_t(tAB3,quad)", dict(solver_name="tab3", schedule="quadratic")),
+        ]
+        row = {"table": "fig5_tab9", "NFE": n}
+        for label, kw in variants:
+            x, _ = solve(eps, xT, nfe_grid=n, **kw)
+            row[label] = round(rmse_to_ref(x, ref), 6)
+        row["full_stack_beats_euler"] = bool(row["+opt_t(tAB3,quad)"] < row["euler"])
+        rows.append(row)
+    return rows

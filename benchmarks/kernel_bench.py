@@ -1,0 +1,66 @@
+"""Kernel microbench: Pallas (interpret) vs jnp reference -- correctness delta
++ structural roofline terms (bytes/flops per call derived analytically; CPU
+wall-time of interpret mode is NOT a TPU proxy and is reported only as
+us_per_call for the harness contract)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+
+from .common import timed
+
+
+def run(quick: bool = False):
+    rows = []
+    key = jax.random.PRNGKey(0)
+
+    # deis_step: memory-bound fused update
+    m, d, r = (1024, 256, 3) if not quick else (256, 128, 2)
+    ks = jax.random.split(key, 4)
+    x = jax.random.normal(ks[0], (m, d))
+    hist = jax.random.normal(ks[1], (r, m, d))
+    psi = jnp.float32(0.95)
+    coeffs = jax.random.normal(ks[2], (r,), jnp.float32)
+    out_k, us_k = timed(lambda: ops.deis_step(x, hist, psi, coeffs, interpret=True))
+    out_r, us_r = timed(lambda: ref.deis_step_ref(x, hist, psi, coeffs))
+    bytes_moved = 4 * (m * d * (r + 2))  # read x+hist, write out
+    rows.append({"table": "kernels", "kernel": "deis_step",
+                 "max_abs_err": float(np.abs(np.asarray(out_k - out_r)).max()),
+                 "us_per_call_interp": round(us_k, 1),
+                 "hbm_bytes_per_call": bytes_moved,
+                 "tpu_roofline_us": round(bytes_moved / 819e9 * 1e6, 2)})
+
+    # flash attention
+    b, s, h, dd = (1, 256, 4, 64) if not quick else (1, 128, 2, 32)
+    q = jax.random.normal(ks[0], (b, s, h, dd))
+    k2 = jax.random.normal(ks[1], (b, s, h, dd))
+    v = jax.random.normal(ks[2], (b, s, h, dd))
+    out_k, us_k = timed(lambda: ops.flash_attention(q, k2, v, blk_q=64, blk_k=64,
+                                                    interpret=True))
+    out_r, _ = timed(lambda: ref.flash_attention_ref(q, k2, v))
+    flops = 4.0 * b * h * s * s * dd
+    rows.append({"table": "kernels", "kernel": "flash_attention",
+                 "max_abs_err": float(np.abs(np.asarray(out_k - out_r)).max()),
+                 "us_per_call_interp": round(us_k, 1),
+                 "flops_per_call": flops,
+                 "tpu_roofline_us": round(flops / 197e12 * 1e6, 3)})
+
+    # ssd_scan
+    b, s, h, p, n = (1, 256, 4, 32, 32) if not quick else (1, 64, 2, 16, 16)
+    x = jax.random.normal(ks[0], (b, s, h, p))
+    a = jax.random.uniform(ks[1], (b, s, h), jnp.float32, 0.8, 0.999)
+    B = jax.random.normal(ks[2], (b, s, n))
+    C = jax.random.normal(ks[3], (b, s, n))
+    (y_k, st_k), us_k = timed(lambda: ops.ssd_scan(x, a, B, C, chunk=64,
+                                                   interpret=True))
+    (y_r, st_r), _ = timed(lambda: ref.ssd_scan_ref(x, a, B, C))
+    chunk = 64
+    flops = 2.0 * b * h * (s / chunk) * (chunk * chunk * n + chunk * chunk * p
+                                         + 2 * chunk * p * n)
+    rows.append({"table": "kernels", "kernel": "ssd_scan",
+                 "max_abs_err": float(np.abs(np.asarray(y_k - y_r)).max()),
+                 "us_per_call_interp": round(us_k, 1),
+                 "flops_per_call": flops,
+                 "tpu_roofline_us": round(flops / 197e12 * 1e6, 3)})
+    return rows

@@ -1,0 +1,25 @@
+"""Paper App. B Q1: DEIS accelerates likelihood evaluation -- rhoRK (Kutta3)
+NLL converges in ~36 NFE vs RK45's ~130+. Here: NLL estimated via the
+transformed PF-ODE on the analytic GMM, compared to the GMM's EXACT NLL."""
+import jax
+import numpy as np
+
+from repro.core.likelihood import nll_bits_per_dim
+
+from .common import SDE, gmm_problem
+
+
+def run(quick: bool = False):
+    gmm, eps, _, _ = gmm_problem()
+    x0 = gmm.sample_data(jax.random.PRNGKey(11), 32 if quick else 64)
+    exact_nll = float(-gmm.log_prob(x0).mean() / x0.shape[-1] / np.log(2.0))
+    rows = []
+    for method, stages in [("kutta3", 3), ("rk4", 4), ("heun", 2)]:
+        for n in ([4, 12] if quick else [4, 8, 12, 24, 48]):
+            est = float(nll_bits_per_dim(SDE, eps, x0, n_steps=n,
+                                         method=method).mean())
+            rows.append({"table": "nll_appB", "method": method,
+                         "NFE": n * stages, "bits_per_dim": round(est, 4),
+                         "exact_bits_per_dim": round(exact_nll, 4),
+                         "abs_err": round(abs(est - exact_nll), 5)})
+    return rows

@@ -1,0 +1,50 @@
+"""Roofline report: reads dry-run JSONL results (produced by
+``python -m repro.launch.dryrun --all --out results/dryrun*.jsonl``) and emits
+the per-(arch x shape x mesh) three-term table for EXPERIMENTS.md §Roofline.
+Does not compile anything itself (the dry-run owns the 512-device namespace)."""
+import glob
+import json
+import os
+
+
+def _latest_results():
+    cands = sorted(glob.glob("results/dryrun*.jsonl"), key=os.path.getmtime)
+    if not cands:
+        return None
+    # prefer the extrapolated-cost sweep if present
+    for c in reversed(cands):
+        rows = [json.loads(l) for l in open(c)]
+        if any(r.get("cost_extrapolated") for r in rows):
+            return rows
+    return [json.loads(l) for l in open(cands[-1])]
+
+
+def run(quick: bool = False):
+    rows_in = _latest_results()
+    if rows_in is None:
+        return [{"table": "roofline", "note": "no results/dryrun*.jsonl found; "
+                 "run python -m repro.launch.dryrun --all --out results/dryrun.jsonl"}]
+    out = []
+    seen = set()
+    for r in rows_in:
+        key = (r["arch"], r["shape"], r.get("mesh"))
+        if key in seen:
+            continue
+        seen.add(key)
+        if r["status"] != "ok":
+            out.append({"table": "roofline", "arch": r["arch"],
+                        "shape": r["shape"], "mesh": r.get("mesh", "?"),
+                        "status": r["status"]})
+            continue
+        t = r["roofline"]
+        out.append({
+            "table": "roofline", "arch": r["arch"], "shape": r["shape"],
+            "mesh": r["mesh"],
+            "compute_s": round(t["compute_s"], 6) if t["compute_s"] else None,
+            "memory_s": round(t["memory_s"], 6) if t["memory_s"] else None,
+            "collective_s": round(t["collective_s"], 6),
+            "bottleneck": r["bottleneck"],
+            "useful_flops_ratio": (round(r["useful_flops_ratio"], 3)
+                                   if r.get("useful_flops_ratio") else None),
+        })
+    return out

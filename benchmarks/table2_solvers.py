@@ -1,0 +1,22 @@
+"""Paper Tab. 2: all DEIS variants x NFE on a trained VPSDE model.
+FID is replaced by RMSE-to-reference (discretization error) + sliced-W2 to the
+data distribution (sample quality)."""
+from .common import trained_problem, rmse_to_ref, sliced_w2, solve
+import jax
+
+SOLVERS = ["ddim", "rho_heun", "rho_kutta3", "rho_rk4",
+           "rhoab1", "rhoab2", "rhoab3", "tab1", "tab2", "tab3"]
+
+
+def run(quick: bool = False):
+    gmm, eps, xT, ref = trained_problem()
+    data = gmm.sample_data(jax.random.PRNGKey(7), 512)
+    rows = []
+    for n in ([10, 20] if quick else [5, 10, 15, 20, 50]):
+        for name in SOLVERS:
+            x, nfe = solve(eps, xT, name, n, "quadratic")
+            rows.append({"table": "table2", "grid_N": n, "solver": name,
+                         "NFE": nfe,
+                         "rmse_to_ref": round(rmse_to_ref(x, ref), 6),
+                         "sliced_w2": round(sliced_w2(x, data), 6)})
+    return rows

@@ -1,0 +1,18 @@
+"""Paper App. B Q5 / Tab. 3: DPM-Solver-2 (lambda-midpoint) vs rhoMid
+(rho-midpoint DEIS) vs tAB-DEIS. Paper finding: DPM-Solver better at very low
+NFE, differences shrink quickly; multistep tAB best at small budgets."""
+from .common import trained_problem, rmse_to_ref, solve
+
+
+def run(quick: bool = False):
+    _, eps, xT, ref = trained_problem()
+    rows = []
+    for n in ([10, 20] if quick else [6, 10, 14, 20, 30, 50]):
+        row = {"table": "table3_dpm", "grid_N": n}
+        for name, label in [("dpm2", "DPM-Solver2"), ("rho_midpoint", "rhoMid"),
+                            ("tab2", "tAB2"), ("tab3", "tAB3")]:
+            x, nfe = solve(eps, xT, name, n, "log_rho")
+            row[label] = round(rmse_to_ref(x, ref), 6)
+            row[f"{label}_nfe"] = nfe
+        rows.append(row)
+    return rows

@@ -1,0 +1,20 @@
+"""Paper Tabs. 4-5: PNDM vs iPNDM vs DDIM vs tAB-DEIS.
+Key claims: iPNDM avoids PNDM's expensive RK warmup; tAB-DEIS beats both."""
+from .common import trained_problem, rmse_to_ref, solve
+
+
+def run(quick: bool = False):
+    _, eps, xT, ref = trained_problem()
+    rows = []
+    for n in ([10, 20] if quick else [5, 10, 20, 50]):
+        row = {"table": "table4_5", "grid_N": n}
+        for name in ["ddim", "ipndm1", "ipndm2", "ipndm3", "tab1", "tab2", "tab3"]:
+            x, nfe = solve(eps, xT, name, n, "quadratic")
+            row[name] = round(rmse_to_ref(x, ref), 6)
+            row[f"{name}_nfe"] = nfe
+        if n >= 10:
+            x, nfe = solve(eps, xT, "pndm", n, "quadratic")
+            row["pndm"] = round(rmse_to_ref(x, ref), 6)
+            row["pndm_nfe"] = nfe  # = n + 9 (RK warmup cost, paper App. H.1)
+        rows.append(row)
+    return rows

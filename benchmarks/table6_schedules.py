@@ -1,0 +1,26 @@
+"""Paper Tabs. 6-8: t0 x time-scheduling study (Eqs. 42-44)."""
+from repro.core import get_timesteps, make_solver
+
+from .common import SDE, trained_problem, rmse_to_ref
+
+
+def run(quick: bool = False):
+    _, eps, xT, ref = trained_problem()
+    rows = []
+    schedules = [("power_t", dict(kappa=1.0)), ("power_t", dict(kappa=2.0)),
+                 ("power_t", dict(kappa=3.0)), ("log_rho", {}),
+                 ("power_rho", dict(kappa=7.0))]
+    t0s = [1e-3, 1e-4]
+    solvers = ["ddim", "tab2", "rhoab2", "rho_heun"] if quick else \
+        ["ddim", "tab1", "tab2", "tab3", "rhoab2", "rho_heun", "rho_kutta3"]
+    for n in ([10] if quick else [5, 10, 20]):
+        for t0 in t0s:
+            for sched, kw in schedules:
+                ts = get_timesteps(SDE, n, sched, t0=t0, **kw)
+                row = {"table": "table6_8", "NFE_grid": n, "t0": t0,
+                       "schedule": f"{sched}{kw.get('kappa','')}"}
+                for name in solvers:
+                    s = make_solver(name, SDE, ts)
+                    row[name] = round(rmse_to_ref(s.sample(eps, xT), ref), 6)
+                rows.append(row)
+    return rows

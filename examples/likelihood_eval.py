@@ -1,0 +1,32 @@
+"""NLL evaluation via DEIS (paper App. B Q1): rhoRK-Kutta3 converges the
+likelihood integral ~4x faster than a generic high-accuracy solve.
+
+    PYTHONPATH=src python examples/likelihood_eval.py"""
+import sys
+
+import jax
+import numpy as np
+
+from repro.core import VPSDE
+from repro.core.likelihood import nll_bits_per_dim
+from repro.diffusion.analytic import default_gmm
+
+
+def main():
+    sde = VPSDE()
+    gmm = default_gmm(sde, d=2)
+    x0 = gmm.sample_data(jax.random.PRNGKey(0), 128)
+    exact = float(-gmm.log_prob(x0).mean() / 2 / np.log(2.0))
+    print(f"exact GMM NLL: {exact:.4f} bits/dim")
+    print(f"{'method':8s} {'steps':>5s} {'NFE':>5s} {'bits/dim':>9s} {'err':>8s}")
+    for method, stages in (("kutta3", 3), ("rk4", 4)):
+        for n in (4, 8, 12, 24):
+            est = float(nll_bits_per_dim(sde, gmm.eps_fn(), x0,
+                                         n_steps=n, method=method).mean())
+            print(f"{method:8s} {n:5d} {n * stages:5d} {est:9.4f} "
+                  f"{abs(est - exact):8.5f}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,73 @@
+"""End-to-end serving driver: train a small diffusion-LM briefly, then serve
+batched generation requests through the DEIS sampling service.
+
+    PYTHONPATH=src python examples/serve_diffusion.py [--train-steps 60]
+
+Demonstrates: config system -> data pipeline -> training loop -> checkpoint ->
+serving engine with DEIS (the paper's technique) as the sampler, including the
+~1/NFE throughput scaling that makes low-NFE solvers operationally valuable."""
+import argparse
+import sys
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import get_config
+from repro.data.pipeline import MarkovTextSource, make_batch
+from repro.models import transformer as T
+from repro.serving.engine import DiffusionServeEngine, Request
+from repro.training import checkpoint as CKPT
+from repro.training.optimizer import AdamW, cosine_schedule
+from repro.training.steps import make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma_2b")
+    ap.add_argument("--train-steps", type=int, default=60)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=32)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced().with_(objective="diffusion")
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    opt = AdamW(cosine_schedule(3e-4, 10, args.train_steps))
+    opt_state = opt.init(params)
+    step = jax.jit(make_train_step(cfg, opt))
+    src = MarkovTextSource(cfg.vocab_size, seed=0)
+
+    print(f"training reduced {cfg.name} diffusion-LM for {args.train_steps} steps ...")
+    rng = jax.random.PRNGKey(1)
+    for i in range(args.train_steps):
+        batch = {k: jnp.asarray(v) for k, v in
+                 make_batch(cfg, src, i, args.batch, args.seq).items()}
+        rng, sub = jax.random.split(rng)
+        params, opt_state, metrics = step(params, opt_state, batch, sub)
+        if i % max(1, args.train_steps // 5) == 0:
+            print(f"  step {i}: loss={float(metrics['loss']):.4f} "
+                  f"mse={float(metrics['mse']):.4f} ce={float(metrics['ce']):.4f}")
+
+    with tempfile.TemporaryDirectory() as d:
+        CKPT.save(d, args.train_steps, params, {"arch": cfg.name})
+        params, meta = CKPT.restore(d, params)
+        print(f"checkpoint round-trip OK (arch={meta['arch']})")
+
+    eng = DiffusionServeEngine(params, cfg)
+    print("\nserving batched requests:")
+    for nfe, solver in [(5, "tab3"), (10, "tab3"), (20, "ddim")]:
+        reqs = [Request(uid=i, seq_len=args.seq, nfe=nfe, solver=solver, seed=i)
+                for i in range(8)]
+        eng.serve(reqs)  # warm
+        t0 = time.time()
+        res = eng.serve(reqs)
+        dt = time.time() - t0
+        print(f"  {solver:5s} NFE={nfe:3d}: {len(res)} seqs in {dt:.2f}s "
+              f"({len(res) / dt:.1f} seq/s), sample tokens: {res[0].tokens[:8]}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

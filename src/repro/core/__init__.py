@@ -1,0 +1,16 @@
+"""DEIS core: the paper's contribution as a composable JAX module."""
+from .sde import SDE, VPSDE, VESDE, SubVPSDE, get_sde
+from .schedules import get_timesteps, SCHEDULES
+from .coeffs import ab_coefficients, ddim_coefficients_vp, naive_ei_coefficients, AB_WEIGHTS
+from .solvers import (ABSolver, RKSolver, EulerSolver, EMSolver, DDIMSolver,
+                      IPNDMSolver, PNDMSolver, make_solver, SOLVER_NAMES, SolverBase)
+from .likelihood import nll_bits_per_dim
+
+__all__ = [
+    "SDE", "VPSDE", "VESDE", "SubVPSDE", "get_sde",
+    "get_timesteps", "SCHEDULES",
+    "ab_coefficients", "ddim_coefficients_vp", "naive_ei_coefficients", "AB_WEIGHTS",
+    "ABSolver", "RKSolver", "EulerSolver", "EMSolver", "DDIMSolver",
+    "IPNDMSolver", "PNDMSolver", "make_solver", "SOLVER_NAMES", "SolverBase",
+    "nll_bits_per_dim",
+]

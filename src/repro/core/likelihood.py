@@ -1,0 +1,104 @@
+r"""Data log-likelihood via the transformed PF-ODE (paper App. B Q1).
+
+In the DEIS y-coordinates (Prop. 3) the PF-ODE is ``dy/drho = eps_hat(y, rho)``,
+so by the instantaneous change-of-variables formula
+
+    d log p(y_rho) / drho = -div_y eps_hat(y, rho),
+
+and with x = mu(t) y the data NLL is
+
+    log p0(x_0) = log pi_y(y_T) - \int_{rho_0}^{rho_T} div eps_hat drho - D log mu(t0->) ...
+
+We integrate forward in rho (t0 -> T) with the rhoRK integrators, which is the
+paper's "NLL with 3rd-order Kutta converges by ~36 NFE, ~4x faster than RK45"
+claim (validated in benchmarks/nll_bench.py). Divergence is exact (jacfwd
+trace) for small D and Hutchinson-estimated otherwise.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .sde import SDE
+from .solvers import _TABLEAUS, _f64
+
+
+def _divergence_exact(fn, y):
+    """trace of d fn / d y for a single flat vector y."""
+    jac = jax.jacfwd(fn)(y)
+    return jnp.trace(jac)
+
+
+def _divergence_hutchinson(fn, y, key, n_probes: int = 8):
+    def one(k):
+        v = jax.random.rademacher(k, y.shape, jnp.float32).astype(y.dtype)
+        _, jvp_v = jax.jvp(fn, (y,), (v,))
+        return jnp.sum(jvp_v * v)
+    keys = jax.random.split(key, n_probes)
+    return jnp.mean(jax.vmap(one)(keys))
+
+
+def nll_bits_per_dim(sde: SDE, eps_fn: Callable, x0: jax.Array, n_steps: int = 12,
+                     method: str = "kutta3", exact_div: bool = True,
+                     key=None, n_probes: int = 8) -> jax.Array:
+    """NLL of a batch of flat data vectors x0 (B, D) in bits/dim.
+
+    Integrates y and logp jointly from t0 to T with a fixed-grid rhoRK method
+    on a uniform-in-rho grid (adaptive solvers waste NFE at low budgets --
+    paper App. B Q2).
+    """
+    d = x0.shape[-1]
+    rho_lo = float(sde.rho(sde.t0))
+    rho_hi = float(sde.rho(sde.T))
+    # geometric (uniform in log-rho) grid: the divergence integrand
+    # concentrates at small rho, where a uniform-in-rho grid undersamples
+    rhos = np.exp(np.linspace(np.log(rho_lo), np.log(rho_hi), n_steps + 1))
+    ts = _f64(sde.t_of_rho(rhos))
+    mus = _f64(sde.mu(ts))
+    c, a, b = _TABLEAUS[method]
+    s = len(c)
+    stage_rho = rhos[:-1, None] + c[None, :] * np.diff(rhos)[:, None]
+    stage_t = _f64(sde.t_of_rho(stage_rho))
+    stage_mu = _f64(sde.mu(stage_t))
+    h = np.diff(rhos)
+
+    a_mat = np.zeros((s, s))
+    for i, row in enumerate(a):
+        a_mat[i, : len(row)] = row
+
+    def eps_hat(y, k, i):
+        return eps_fn(stage_mu[k, i] * y, jnp.asarray(stage_t[k, i], y.dtype))
+
+    def single(x0_i, key_i):
+        y = x0_i / mus[0]
+        logp_delta = jnp.zeros(())
+        for k in range(n_steps):  # static unroll: n_steps is small
+            ks, divs = [], []
+            for i in range(s):
+                y_i = y
+                for j in range(i):
+                    y_i = y_i + h[k] * a_mat[i, j] * ks[j]
+                fn = lambda yy, k=k, i=i: eps_hat(yy, k, i)
+                ks.append(fn(y_i))
+                if exact_div:
+                    divs.append(_divergence_exact(fn, y_i))
+                else:
+                    key_i, sub = jax.random.split(key_i)
+                    divs.append(_divergence_hutchinson(fn, y_i, sub, n_probes))
+            y = y + h[k] * sum(float(b[i]) * ks[i] for i in range(s))
+            logp_delta = logp_delta - h[k] * sum(float(b[i]) * divs[i] for i in range(s))
+        # prior: x_T ~ N(0, (mu_T^2 + sigma_T^2) I) => y_T ~ N(0, (1 + rho_T^2) I)
+        var_y = 1.0 + rho_hi ** 2
+        logp_prior = -0.5 * jnp.sum(y ** 2) / var_y - 0.5 * d * jnp.log(2 * jnp.pi * var_y)
+        # log p_x(x0) = log p_y(y0) - D log mu(t0); we computed logp_y(y_t0) via flow
+        logp_y0 = logp_prior - logp_delta
+        logp_x0 = logp_y0 - d * jnp.log(mus[0])
+        return -(logp_x0) / d / jnp.log(2.0)
+
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    keys = jax.random.split(key, x0.shape[0])
+    return jax.vmap(single)(x0, keys)

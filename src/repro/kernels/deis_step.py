@@ -1,0 +1,58 @@
+"""Fused DEIS multistep update kernel (paper Eq. 14).
+
+    x' = psi * x + sum_{j<R} c_j * eps_hist[j]
+
+The update is memory-bound (zero MXU work): the win over XLA's un-fused form
+is reading x and each eps exactly once from HBM instead of R+1 round trips
+for the partial sums. VPU-tiled: blocks are (BLK_M, 128)-aligned in VMEM;
+scalars (psi, c_j) ride along as a small VMEM operand.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLK_M = 256
+BLK_D = 128
+
+
+def _kernel(scal_ref, x_ref, hist_ref, out_ref):
+    # scal_ref: (R+1,) [psi, c_0..c_{R-1}]; x_ref: (BLK_M, BLK_D);
+    # hist_ref: (R, BLK_M, BLK_D)
+    psi = scal_ref[0]
+    acc = psi.astype(jnp.float32) * x_ref[...].astype(jnp.float32)
+    r = hist_ref.shape[0]
+    for j in range(r):  # static unroll; R <= 4
+        acc += scal_ref[1 + j].astype(jnp.float32) * hist_ref[j].astype(jnp.float32)
+    out_ref[...] = acc.astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def deis_step(x, eps_hist, psi, coeffs, *, interpret: bool = True):
+    """x: (M, D); eps_hist: (R, M, D); psi scalar; coeffs: (R,)."""
+    m, d = x.shape
+    r = eps_hist.shape[0]
+    # pad to tile multiples
+    pm = (-m) % BLK_M
+    pd = (-d) % BLK_D
+    xp = jnp.pad(x, ((0, pm), (0, pd)))
+    hp = jnp.pad(eps_hist, ((0, 0), (0, pm), (0, pd)))
+    scal = jnp.concatenate([jnp.reshape(psi, (1,)).astype(jnp.float32),
+                            coeffs.astype(jnp.float32)])
+    grid = ((m + pm) // BLK_M, (d + pd) // BLK_D)
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((r + 1,), lambda i, j: (0,)),
+            pl.BlockSpec((BLK_M, BLK_D), lambda i, j: (i, j)),
+            pl.BlockSpec((r, BLK_M, BLK_D), lambda i, j: (0, i, j)),
+        ],
+        out_specs=pl.BlockSpec((BLK_M, BLK_D), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct(xp.shape, x.dtype),
+        interpret=interpret,
+    )(scal, xp, hp)
+    return out[:m, :d]

@@ -1,0 +1,125 @@
+"""Flash attention for TPU (blocked online-softmax), GQA + causal + SWA.
+
+TPU-native design (not a CUDA port): the grid's minor-most dimension walks KV
+blocks *sequentially* (TPU grids are sequential, unlike CUDA thread blocks),
+so the running max/denominator live in VMEM scratch across grid steps --
+no atomics, no shared-memory reductions. Q/K/V blocks are MXU-aligned
+(BLK x head_dim). The GQA mapping h -> h // n_rep happens in the K/V
+BlockSpec index maps, so kv heads are never materialized n_rep times in HBM.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, out_ref, m_scr, l_scr, acc_scr, *,
+            scale, causal, window, blk_q, blk_k, n_k_blocks, kv_len):
+    i = pl.program_id(1)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)          # (BQ, D)
+    k = k_ref[0].astype(jnp.float32)          # (BK, D)
+    v = v_ref[0].astype(jnp.float32)          # (BK, D)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    q_pos = i * blk_q + jax.lax.broadcasted_iota(jnp.int32, (blk_q, blk_k), 0)
+    k_pos = j * blk_k + jax.lax.broadcasted_iota(jnp.int32, (blk_q, blk_k), 1)
+    mask = k_pos < kv_len                      # KV padding
+    if causal:
+        mask &= k_pos <= q_pos
+    if window:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.where(mask, jnp.exp(s - m_new[:, None]), 0.0)
+    alpha = jnp.exp(m_prev - m_new)
+    l_scr[...] = alpha * l_scr[...] + jnp.sum(p, axis=1)
+    acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot(
+        p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(j == n_k_blocks - 1)
+    def _finish():
+        out_ref[0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)[:, None]
+                      ).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "window", "blk_q", "blk_k",
+                                    "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    blk_q: int = 128, blk_k: int = 128,
+                    interpret: bool = True):
+    """q: (B,Sq,H,D); k,v: (B,Sk,KV,D), H % KV == 0. Returns (B,Sq,H,D).
+
+    ``causal`` assumes q and k index the same positions (self-attention).
+    """
+    b, sq, h, d = q.shape
+    sk, kv = k.shape[1], k.shape[2]
+    assert h % kv == 0, (h, kv)
+    n_rep = h // kv
+    scale = 1.0 / math.sqrt(d)
+
+    blk_q = min(blk_q, max(sq, 8))
+    blk_k = min(blk_k, sk)
+    pq = (-sq) % blk_q
+    pk = (-sk) % blk_k
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    sq_p, sk_p = sq + pq, sk + pk
+    n_k_blocks = sk_p // blk_k
+
+    # fold (B, H) into one grid axis; head axis leaves the block
+    qt = q.transpose(0, 2, 1, 3).reshape(b * h, sq_p, d)
+    kt = k.transpose(0, 2, 1, 3).reshape(b * kv, sk_p, d)
+    vt = v.transpose(0, 2, 1, 3).reshape(b * kv, sk_p, d)
+
+    def q_map(g, i, j):
+        return (g, i, 0)
+
+    def kv_map(g, i, j):
+        return ((g // h) * kv + (g % h) // n_rep, j, 0)
+
+    kern = functools.partial(
+        _kernel, scale=scale, causal=causal, window=window,
+        blk_q=blk_q, blk_k=blk_k, n_k_blocks=n_k_blocks, kv_len=sk)
+
+    out = pl.pallas_call(
+        kern,
+        grid=(b * h, sq_p // blk_q, n_k_blocks),
+        in_specs=[
+            pl.BlockSpec((1, blk_q, d), q_map),
+            pl.BlockSpec((1, blk_k, d), kv_map),
+            pl.BlockSpec((1, blk_k, d), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, blk_q, d), q_map),
+        out_shape=jax.ShapeDtypeStruct((b * h, sq_p, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((blk_q,), jnp.float32),
+            pltpu.VMEM((blk_q,), jnp.float32),
+            pltpu.VMEM((blk_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    out = out.reshape(b, h, sq_p, d).transpose(0, 2, 1, 3)
+    return out[:, :sq]

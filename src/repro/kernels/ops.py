@@ -1,0 +1,34 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True off-TPU (this container is CPU-only; interpret
+mode executes the kernel body in Python for correctness validation) and False
+on real TPU backends.
+"""
+from __future__ import annotations
+
+import jax
+
+from .deis_step import deis_step as _deis_step
+from .flash_attention import flash_attention as _flash_attention
+from .ssd_scan import ssd_scan as _ssd_scan
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def deis_step(x, eps_hist, psi, coeffs, *, interpret=None):
+    return _deis_step(x, eps_hist, psi, coeffs,
+                      interpret=_default_interpret() if interpret is None else interpret)
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, blk_q=128, blk_k=128,
+                    interpret=None):
+    return _flash_attention(
+        q, k, v, causal=causal, window=window, blk_q=blk_q, blk_k=blk_k,
+        interpret=_default_interpret() if interpret is None else interpret)
+
+
+def ssd_scan(x, a, B, C, *, chunk=128, interpret=None):
+    return _ssd_scan(x, a, B, C, chunk=chunk,
+                     interpret=_default_interpret() if interpret is None else interpret)

@@ -1,0 +1,61 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def deis_step_ref(x, eps_hist, psi, coeffs):
+    """x' = psi * x + sum_j coeffs[j] * eps_hist[j].
+
+    x: (M, D); eps_hist: (R, M, D); psi scalar; coeffs (R,)."""
+    comb = jnp.tensordot(coeffs.astype(jnp.float32),
+                         eps_hist.astype(jnp.float32), axes=1)
+    return (psi.astype(jnp.float32) * x.astype(jnp.float32) + comb).astype(x.dtype)
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0):
+    """q: (B,Sq,H,D); k,v: (B,Sk,KV,D) with H % KV == 0 (GQA)."""
+    b, sq, h, d = q.shape
+    kv = k.shape[2]
+    n_rep = h // kv
+    if n_rep > 1:
+        k = jnp.repeat(k, n_rep, axis=2)
+        v = jnp.repeat(v, n_rep, axis=2)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / math.sqrt(d)
+    qp = jnp.arange(sq)[:, None]
+    kp = jnp.arange(k.shape[1])[None, :]
+    mask = jnp.ones((sq, k.shape[1]), bool)
+    if causal:
+        mask &= kp <= qp
+    if window:
+        mask &= kp > qp - window
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def ssd_scan_ref(x, a, B, C):
+    """Naive (exact) SSD recurrence oracle.
+
+    x: (Bb,S,H,P), a: (Bb,S,H), B,C: (Bb,S,N).
+    h_t = a_t h_{t-1} + B_t x_t^T ; y_t = C_t h_t. Returns (y, final_state)."""
+    bb, s, h, p = x.shape
+    n = B.shape[-1]
+
+    def step(state, inp):
+        x_t, a_t, b_t, c_t = inp
+        state = state * a_t[:, :, None, None] + jnp.einsum(
+            "bhp,bn->bhpn", x_t.astype(jnp.float32), b_t.astype(jnp.float32))
+        y_t = jnp.einsum("bn,bhpn->bhp", c_t.astype(jnp.float32), state)
+        return state, y_t
+
+    init = jnp.zeros((bb, h, p, n), jnp.float32)
+    xs = (jnp.moveaxis(x, 1, 0), jnp.moveaxis(a, 1, 0),
+          jnp.moveaxis(B, 1, 0), jnp.moveaxis(C, 1, 0))
+    final, ys = jax.lax.scan(step, init, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), final

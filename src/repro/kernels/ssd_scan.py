@@ -1,0 +1,126 @@
+"""Mamba2 SSD chunked-scan kernel (arXiv:2405.21060), TPU-native.
+
+Per (batch, head) the grid walks chunks SEQUENTIALLY (minor grid dim); the
+running state h in R^{P x N} lives in VMEM scratch across grid steps. Each
+chunk does three MXU matmuls entirely in VMEM:
+
+    scores = C B^T               (L x L)
+    y_intra = (scores . decay . tril) x        (L x P)
+    y_inter = (C decay_in) h_prev              (L x P)
+    h_new   = a_chunk h_prev + (B . decay_out)^T x
+
+This is the hardware adaptation of the paper's CUDA selective-scan: no warp
+shuffles -- the sequential dependence is carried by the grid, the quadratic
+within-chunk work feeds the systolic MXU, and the (L,L,H) decay tensor that
+bloats the XLA path (see EXPERIMENTS.md §Perf jamba iteration) never leaves
+VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, a_ref, b_ref, c_ref, y_ref, state_out_ref, h_scr, *,
+            n_chunks, chunk):
+    cidx = pl.program_id(1)
+
+    @pl.when(cidx == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    x = x_ref[0].astype(jnp.float32)           # (L, P)
+    a = a_ref[0, :, 0].astype(jnp.float32)     # (L,)
+    B = b_ref[0].astype(jnp.float32)           # (L, N)
+    C = c_ref[0].astype(jnp.float32)           # (L, N)
+
+    log_a = jnp.log(jnp.maximum(a, 1e-37))
+    cum = jnp.cumsum(log_a)                    # (L,) inclusive
+    # within-chunk decay matrix exp(cum_t - cum_u) for u <= t
+    seg = cum[:, None] - cum[None, :]
+    tri = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1) <= \
+        jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    decay = jnp.where(tri, jnp.exp(seg), 0.0)
+
+    scores = jax.lax.dot_general(C, B, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    w = scores * decay                         # (L, L)
+    y = jax.lax.dot(w, x, preferred_element_type=jnp.float32)
+
+    # inter-chunk from carried state
+    h_prev = h_scr[...]                        # (P, N)
+    c_in = C * jnp.exp(cum)[:, None]           # (L, N)
+    y += jax.lax.dot_general(c_in, h_prev, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+
+    # state update
+    decay_to_end = jnp.exp(cum[-1] - cum)      # (L,)
+    b_out = B * decay_to_end[:, None]          # (L, N)
+    h_new = h_prev * jnp.exp(cum[-1]) + jax.lax.dot_general(
+        x, b_out, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    h_scr[...] = h_new
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    @pl.when(cidx == n_chunks - 1)
+    def _finish():
+        state_out_ref[0] = h_new.astype(state_out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, a, B, C, *, chunk: int = 128, interpret: bool = True):
+    """x: (Bb,S,H,P); a: (Bb,S,H); B,C: (Bb,S,N). Returns (y, final_state).
+
+    y: (Bb,S,H,P); final_state: (Bb,H,P,N) float32.
+    """
+    bb, s, h, p = x.shape
+    n = B.shape[-1]
+    chunk = min(chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)), constant_values=1.0)
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    sp = s + pad
+    n_chunks = sp // chunk
+
+    # layouts: fold (B,H) -> G for x/a; B/C shared across heads (indexed by
+    # batch only in the map)
+    xt = x.transpose(0, 2, 1, 3).reshape(bb * h, sp, p)
+    at = a.transpose(0, 2, 1).reshape(bb * h, sp, 1)
+
+    # grid: (batch*head, chunks) -- chunks minor => sequential state carry
+    def xa_map2(g, c):
+        return (g, c, 0)
+
+    def bc_map2(g, c):
+        return (g // h, c, 0)
+
+    kern = functools.partial(_kernel, n_chunks=n_chunks, chunk=chunk)
+    y, state = pl.pallas_call(
+        kern,
+        grid=(bb * h, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, chunk, p), xa_map2),
+            pl.BlockSpec((1, chunk, 1), xa_map2),
+            pl.BlockSpec((1, chunk, n), bc_map2),
+            pl.BlockSpec((1, chunk, n), bc_map2),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, p), xa_map2),
+            pl.BlockSpec((1, p, n), lambda g, c: (g, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bb * h, sp, p), x.dtype),
+            jax.ShapeDtypeStruct((bb * h, p, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(xt, at, B, C)
+    y = y.reshape(bb, h, sp, p).transpose(0, 2, 1, 3)[:, :s]
+    state = state.reshape(bb, h, p, n)
+    return y, state

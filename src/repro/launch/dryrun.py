@@ -1,0 +1,440 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape x mesh) combo
+on 512 placeholder CPU devices and extract roofline inputs.
+
+MUST be the entrypoint process (XLA_FLAGS is set above before any jax import).
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma_2b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --out results/dryrun
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.base import INPUT_SHAPES, ModelConfig, get_config
+from ..core.sde import VPSDE
+from ..models import transformer as T
+from ..sharding import rules as R
+from ..training.optimizer import AdamW, constant_schedule
+from ..training import steps as STEPS
+from .mesh import make_production_mesh, PEAK_FLOPS_BF16, HBM_BW, ICI_BW
+
+# archs that may run the 524k-decode shape (sub-quadratic attention path);
+# see DESIGN.md §Arch-applicability for the skip rationale.
+LONG_OK = {"mamba2_2p7b", "jamba_1p5_large", "h2o_danube_3_4b", "mixtral_8x7b"}
+
+ALL_ARCHS = ["whisper_tiny", "h2o_danube_3_4b", "paligemma_3b", "mixtral_8x7b",
+             "grok_1_314b", "mamba2_2p7b", "glm4_9b", "gemma_2b",
+             "granite_3_8b", "jamba_1p5_large"]
+
+FSDP_PARAM_THRESHOLD = 8e9  # shard big-model weights/opt-state over 'data' too
+
+
+def param_count(tree) -> int:
+    return sum(int(np.prod(l.shape)) for l in jax.tree.leaves(tree))
+
+
+def _sds(tree):
+    return jax.tree.map(lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype), tree)
+
+
+def make_workload(cfg: ModelConfig, shape_name: str, mesh, *, fsdp=None,
+                  remat=True, seq_shard_cache=True, sde=None, unroll=1,
+                  ff2d=False, zero3=False, deis_shard="dmodel"):
+    """Returns (fn, arg_specs, in_shardings, donate) for the given workload.
+
+    zero3: FSDP weights are all-gathered per BLOCK inside the scan body
+    (with_sharding_constraint to model-only specs) instead of letting GSPMD
+    choose -- ZeRO-3 just-in-time gathering (§Perf grok iteration)."""
+    shp = INPUT_SHAPES[shape_name]
+    b, s = shp.global_batch, shp.seq_len
+    dtype = {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[cfg.dtype]
+    sde = sde or VPSDE()
+
+    params_shape = jax.eval_shape(lambda k: T.init_params(cfg, k),
+                                  jax.ShapeDtypeStruct((2,), jnp.uint32))
+    n_params = param_count(params_shape)
+    if fsdp is None:
+        fsdp = n_params > FSDP_PARAM_THRESHOLD
+    pspec = R.param_specs(params_shape, mesh, fsdp=fsdp, ff2d=ff2d)
+    psh = R.to_shardings(pspec, mesh)
+    ba = R.batch_axes(mesh)
+
+    block_constraint = None
+    if zero3 and fsdp:
+        # model-only specs for ONE block slice (leading stacked dim removed)
+        slice_shape = jax.tree.map(
+            lambda l: jax.ShapeDtypeStruct(l.shape[1:], l.dtype),
+            params_shape["blocks"])
+        slice_spec = R.param_specs(slice_shape, mesh, fsdp=False)
+        block_constraint = jax.tree.map(
+            lambda sp: NamedSharding(mesh, sp), slice_spec,
+            is_leaf=lambda x: isinstance(x, P))
+
+    batch_shape = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    if cfg.arch_type == "encdec":
+        batch_shape["frames"] = jax.ShapeDtypeStruct((b, cfg.encoder_seq, cfg.d_model), dtype)
+    if cfg.arch_type == "vlm":
+        batch_shape["prefix"] = jax.ShapeDtypeStruct((b, cfg.prefix_tokens, cfg.d_model), dtype)
+    bsh = R.to_shardings(R.batch_specs(batch_shape, mesh), mesh)
+
+    if shp.kind == "train":
+        opt = AdamW(constant_schedule(1e-4))
+        opt_shape = jax.eval_shape(opt.init, params_shape)
+        osh = R.to_shardings(R.opt_state_specs(opt_shape, pspec, mesh), mesh)
+        fn = STEPS.make_train_step(cfg, opt, sde, remat=remat, unroll=unroll,
+                                   block_constraint=block_constraint)
+        rng = jax.ShapeDtypeStruct((2,), jnp.uint32)
+        args = (params_shape, opt_shape, batch_shape, rng)
+        in_sh = (psh, osh, bsh, NamedSharding(mesh, P()))
+        donate = (0, 1)
+        return fn, args, in_sh, donate, n_params
+
+    if shp.kind == "prefill":
+        fn = STEPS.make_prefill_step(cfg, unroll=unroll)
+        args = (params_shape, batch_shape)
+        return fn, args, (psh, bsh), (), n_params
+
+    if shp.kind == "deis":
+        # one DEIS NFE over a batch of embedding-space states (the paper's
+        # sampling workload): eps eval + fused multistep update (Eq. 14)
+        fn = STEPS.make_deis_sample_step(cfg, sde, unroll=unroll)
+        order = 3
+        x = jax.ShapeDtypeStruct((b, s, cfg.d_model), dtype)
+        hist = jax.ShapeDtypeStruct((order + 1, b, s, cfg.d_model), dtype)
+        scal = jax.ShapeDtypeStruct((), jnp.float32)
+        coeff = jax.ShapeDtypeStruct((order + 1,), jnp.float32)
+        t = jax.ShapeDtypeStruct((), jnp.float32)
+        if deis_shard == "seq":
+            xs = NamedSharding(mesh, P(ba, "model", None))
+            hs = NamedSharding(mesh, P(None, ba, "model", None))
+        else:
+            xs = NamedSharding(mesh, P(ba, None, "model"))
+            hs = NamedSharding(mesh, P(None, ba, None, "model"))
+        rep = NamedSharding(mesh, P())
+        args = (params_shape, x, hist, t, scal, coeff)
+        return fn, args, (psh, xs, hs, rep, rep, rep), (1, 2), n_params
+
+    # decode: ONE token against a seq_len cache
+    cache_shape = jax.eval_shape(
+        lambda: T.init_cache(cfg, b, s, dtype))
+    csh = R.to_shardings(R.cache_specs(cache_shape, mesh, seq_shard=seq_shard_cache), mesh)
+    token = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    tsh = NamedSharding(mesh, P(ba) if b % np.prod([mesh.shape[a] for a in ba]) == 0 else P())
+    idx = jax.ShapeDtypeStruct((), jnp.int32)
+    fn = STEPS.make_decode_step(cfg, unroll=unroll)
+    args = (params_shape, cache_shape, token, idx)
+    in_sh = (psh, csh, tsh, NamedSharding(mesh, P()))
+    return fn, args, in_sh, (1,), n_params
+
+
+_SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|f8\w*|s64|s32|s16|s8|u64|u32|u16|u8|pred)\[([0-9,]*)\]")
+_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "s32": 4, "s16": 2,
+          "s8": 1, "u64": 8, "u32": 4, "u16": 2, "u8": 1, "pred": 1}
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-device bytes moved by collectives, parsed from post-SPMD HLO.
+
+    Uses the RESULT shape of each collective op line; all-reduce counted 2x
+    (ring reduce+broadcast), others 1x. Start/done pairs counted once.
+    """
+    out = {k: 0.0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        m = re.match(r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.*)", ls)
+        if not m:
+            continue
+        rhs = m.group(1)
+        op = None
+        for c in _COLLECTIVES:
+            if re.search(rf"\b{c}(-start)?\(", rhs):
+                op = c
+                break
+        if op is None or f"{op}-done" in rhs:
+            continue
+        # result type is everything before the op name
+        head = rhs.split(op)[0]
+        nbytes = 0
+        for dt, dims in _SHAPE_RE.findall(head):
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * _BYTES.get(dt, 4)
+        mult = 2.0 if op == "all-reduce" else 1.0
+        out[op] += mult * nbytes
+        counts[op] += 1
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    out["counts"] = counts
+    return out
+
+
+def model_flops(cfg: ModelConfig, shape_name: str) -> float:
+    """MODEL_FLOPS = 6 N D (dense) / 6 N_active D (MoE), D = tokens processed.
+    Decode: D = global_batch (one token each); train counts fwd+bwd (x3)."""
+    shp = INPUT_SHAPES[shape_name]
+    params_shape = jax.eval_shape(lambda k: T.init_params(cfg, k),
+                                  jax.ShapeDtypeStruct((2,), jnp.uint32))
+    n_active = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params_shape)[0]:
+        ps = R._path_str(path)
+        n = int(np.prod(leaf.shape))
+        if cfg.moe is not None and re.search(r"moe/(w_up|w_gate|w_down)$", ps):
+            n = n * cfg.moe.top_k // cfg.moe.num_experts
+        if re.search(r"^embed$", ps):
+            if cfg.tie_embeddings:
+                n_active += n  # used as the LM head matmul
+            continue  # lookup itself is not a matmul
+        n_active += n
+    tokens = shp.global_batch * (shp.seq_len if shp.kind != "decode" else 1)
+    mult = 6.0 if shp.kind == "train" else 2.0
+    return mult * n_active * tokens
+
+
+def _compile_costs(cfg, shape_name, mesh, *, fsdp, remat, seq_shard_cache,
+                   unroll, ff2d=False, zero3=False, **wl_kw):
+    """Compile one workload (possibly depth-reduced) and return cost terms."""
+    fn, args, in_sh, donate, _ = make_workload(
+        cfg, shape_name, mesh, fsdp=fsdp, remat=remat,
+        seq_shard_cache=seq_shard_cache, unroll=unroll, ff2d=ff2d, zero3=zero3,
+        **wl_kw)
+    jfn = jax.jit(fn, in_shardings=in_sh, donate_argnums=donate)
+    with jax.set_mesh(mesh):
+        compiled = jfn.lower(*args).compile()
+    cost = compiled.cost_analysis() or {}
+    coll = collective_bytes(compiled.as_text())
+    return {"flops": float(cost.get("flops", 0.0)),
+            "bytes": float(cost.get("bytes accessed", 0.0)),
+            "collective": coll["total"],
+            "coll_by_op": {k: coll[k] for k in _COLLECTIVES}}
+
+
+def extrapolated_costs(cfg, shape_name, mesh, *, fsdp, remat,
+                       seq_shard_cache, ff2d=False, zero3=False, **wl_kw) -> dict:
+    """Depth-extrapolated per-device costs.
+
+    XLA's HloCostAnalysis counts a while-loop body ONCE regardless of trip
+    count (verified in tests/test_dryrun_units.py), so a rolled lax.scan over
+    n_blocks undercounts by ~n_blocks. Fully unrolling the 64-72 block configs
+    is compile-time-prohibitive on this host, so: compile depth-1-block and
+    depth-2-block versions UNROLLED (exact costs) and extrapolate linearly:
+
+        cost(n) = cost(1) + (n - 1) * [cost(2) - cost(1)]
+
+    Exact for anything linear in depth (per-block compute, per-block
+    collectives, optimizer update) and for depth-constant terms (embedding,
+    logits, encoder); blocks are homogeneous by construction.
+    """
+    from ..models.transformer import block_size as _bs, n_blocks as _nb
+    nb = _nb(cfg)
+    bs = _bs(cfg)
+    if nb <= 2:
+        c = _compile_costs(cfg, shape_name, mesh, fsdp=fsdp, remat=remat,
+                           seq_shard_cache=seq_shard_cache, unroll=True,
+                           ff2d=ff2d, zero3=zero3, **wl_kw)
+        return dict(c, extrapolated=False)
+    cfg1 = cfg.with_(n_layers=bs)
+    cfg2 = cfg.with_(n_layers=2 * bs)
+    c1 = _compile_costs(cfg1, shape_name, mesh, fsdp=fsdp, remat=remat,
+                        seq_shard_cache=seq_shard_cache, unroll=True, ff2d=ff2d,
+                        zero3=zero3, **wl_kw)
+    c2 = _compile_costs(cfg2, shape_name, mesh, fsdp=fsdp, remat=remat,
+                        seq_shard_cache=seq_shard_cache, unroll=True, ff2d=ff2d,
+                        zero3=zero3, **wl_kw)
+    def _extrap(a, b):
+        # per-block slope clamped at >= 0: XLA occasionally optimizes the
+        # 2-block module below the 1-block one (decode-path fusions); a
+        # negative slope extrapolated 60+ blocks is nonsense, so floor it.
+        body = max(0.0, b - a)
+        return max(a + (nb - 1) * body, b)
+
+    out = {}
+    for k in ("flops", "bytes"):
+        out[k] = _extrap(c1[k], c2[k])
+    out["coll_by_op"] = {k: _extrap(c1["coll_by_op"][k], c2["coll_by_op"][k])
+                         for k in _COLLECTIVES}
+    out["collective"] = sum(out["coll_by_op"].values())
+    out["raw_depth_costs"] = {"c1": {k: c1[k] for k in ("flops", "bytes", "collective")},
+                              "c2": {k: c2[k] for k in ("flops", "bytes", "collective")}}
+    out["extrapolated"] = True
+    return out
+
+
+def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool, mesh=None,
+               fsdp=None, remat=True, seq_shard_cache=True, objective=None,
+               unroll=True, verbose=True, overrides: dict | None = None,
+               ff2d: bool = False, zero3: bool = False, deis_shard="dmodel") -> dict:
+    cfg = get_config(arch)
+    shp = INPUT_SHAPES[shape_name]
+    if objective is None:
+        objective = "diffusion" if shp.kind in ("train", "deis") else "ar"
+    cfg = cfg.with_(objective=objective)
+    if shp.kind == "deis" and cfg.arch_type == "encdec":
+        return {"arch": arch, "shape": shape_name, "status": "skipped",
+                "reason": "deis sampling workload is lowered unconditionally; "
+                          "enc-dec conditioning goes through the serve engine"}
+    if overrides:
+        import dataclasses as _dc
+        ssm_over = {k[4:]: v for k, v in overrides.items() if k.startswith("ssm_")}
+        plain = {k: v for k, v in overrides.items() if not k.startswith("ssm_")}
+        if ssm_over and cfg.ssm is not None:
+            cfg = cfg.with_(ssm=_dc.replace(cfg.ssm, **ssm_over))
+        if plain:
+            cfg = cfg.with_(**plain)
+    if shape_name == "long_500k" and arch not in LONG_OK:
+        return {"arch": arch, "shape": shape_name, "status": "skipped",
+                "reason": "full-attention arch; see DESIGN.md shape-coverage skips"}
+
+    mesh = mesh if mesh is not None else make_production_mesh(multi_pod=multi_pod)
+    n_dev = int(np.prod(list(mesh.shape.values())))
+    t0 = time.time()
+    if fsdp is None:  # resolve from the FULL model so the depth-reduced
+        # extrapolation compiles use the same sharding policy
+        full_shape = jax.eval_shape(lambda k: T.init_params(cfg, k),
+                                    jax.ShapeDtypeStruct((2,), jnp.uint32))
+        fsdp = param_count(full_shape) > FSDP_PARAM_THRESHOLD
+    # 1) full-depth rolled compile: THE lowering proof + memory analysis.
+    # Whole-loss remat here: per-block remat makes GSPMD+MoE compiles
+    # intractably slow at depth 64 (documented in EXPERIMENTS.md §Dry-run);
+    # the extrapolation compiles below use per-block remat for honest costs.
+    fn, args, in_sh, donate, n_params = make_workload(
+        cfg, shape_name, mesh, fsdp=fsdp, remat=("loss" if remat else False),
+        seq_shard_cache=seq_shard_cache, unroll=1, ff2d=ff2d, zero3=zero3,
+        deis_shard=deis_shard)
+    jfn = jax.jit(fn, in_shardings=in_sh, donate_argnums=donate)
+    with jax.set_mesh(mesh):
+        lowered = jfn.lower(*args)
+        compiled = lowered.compile()
+    compile_s = time.time() - t0
+
+    try:
+        mem = compiled.memory_analysis()
+        mem_info = {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "generated_code_bytes": getattr(mem, "generated_code_size_in_bytes", None),
+        }
+    except Exception as e:  # noqa: BLE001
+        mem_info = {"error": str(e)}
+
+    # 2) depth-extrapolated costs (exact loop-body accounting; see docstring)
+    if unroll:
+        costs = extrapolated_costs(cfg, shape_name, mesh, fsdp=fsdp,
+                                   remat=("block" if remat else False),
+                                   seq_shard_cache=seq_shard_cache, ff2d=ff2d,
+                                   zero3=zero3, deis_shard=deis_shard)
+    else:
+        cost = compiled.cost_analysis() or {}
+        coll0 = collective_bytes(compiled.as_text())
+        costs = {"flops": float(cost.get("flops", 0.0)),
+                 "bytes": float(cost.get("bytes accessed", 0.0)),
+                 "collective": coll0["total"],
+                 "coll_by_op": {k: coll0[k] for k in _COLLECTIVES},
+                 "extrapolated": False}
+    flops_dev, bytes_dev = costs["flops"], costs["bytes"]
+
+    mf = model_flops(cfg, shape_name)
+    compute_term = flops_dev / PEAK_FLOPS_BF16 if flops_dev > 0 else None
+    memory_term = bytes_dev / HBM_BW if bytes_dev > 0 else None
+    collective_term = costs["collective"] / ICI_BW
+    terms = {"compute_s": compute_term, "memory_s": memory_term,
+             "collective_s": collective_term}
+    present = {k: v for k, v in terms.items() if v is not None}
+    bottleneck = max(present, key=present.get) if present else None
+
+    res = {
+        "arch": arch, "shape": shape_name, "status": "ok",
+        "mesh": ("pod2x16x16" if multi_pod else "16x16"), "devices": n_dev,
+        "objective": objective, "n_params": n_params,
+        "compile_s": round(time.time() - t0, 1),
+        "full_compile_s": round(compile_s, 1),
+        "flops_per_device": flops_dev, "bytes_per_device": bytes_dev,
+        "collectives": dict(costs["coll_by_op"], total=costs["collective"]),
+        "cost_extrapolated": costs.get("extrapolated", False),
+        "memory": mem_info,
+        "roofline": terms, "bottleneck": bottleneck,
+        "model_flops_total": mf,
+        "useful_flops_ratio": (mf / (flops_dev * n_dev)
+                               if flops_dev and flops_dev > 0 else None),
+    }
+    if verbose:
+        print(json.dumps({k: res[k] for k in
+                          ("arch", "shape", "mesh", "status", "compile_s",
+                           "flops_per_device", "bytes_per_device", "bottleneck")}))
+        print("  roofline:", terms)
+        print("  collectives:", res["collectives"])
+        print("  memory_analysis:", mem_info)
+    return res
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--objective", default=None)
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--no-unroll", action="store_true",
+                    help="keep lax.scan rolled (faster compile; XLA cost "
+                         "analysis then counts the loop body once)")
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--out", default=None, help="write JSONL results here")
+    args = ap.parse_args()
+
+    combos = []
+    archs = ALL_ARCHS if (args.all or args.arch is None) else [args.arch]
+    shapes = [args.shape] if args.shape else list(INPUT_SHAPES)
+    meshes = [False, True] if (args.both_meshes or args.all) else [args.multi_pod]
+    for a in archs:
+        for s in shapes:
+            for mp in meshes:
+                combos.append((a, s, mp))
+
+    results = []
+    mesh_cache = {}
+    for a, s, mp in combos:
+        if mp not in mesh_cache:
+            mesh_cache[mp] = make_production_mesh(multi_pod=mp)
+        try:
+            r = dryrun_one(a, s, multi_pod=mp, mesh=mesh_cache[mp],
+                           fsdp=(False if args.no_fsdp else None),
+                           remat=not args.no_remat, objective=args.objective,
+                           unroll=not args.no_unroll)
+        except Exception as e:  # noqa: BLE001
+            traceback.print_exc()
+            r = {"arch": a, "shape": s,
+                 "mesh": ("pod2x16x16" if mp else "16x16"),
+                 "status": "error", "error": str(e)[:2000]}
+        results.append(r)
+        if args.out:
+            with open(args.out, "a") as f:
+                f.write(json.dumps(r) + "\n")
+
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_skip = sum(r["status"] == "skipped" for r in results)
+    n_err = sum(r["status"] == "error" for r in results)
+    print(f"\ndry-run complete: {n_ok} ok, {n_skip} skipped, {n_err} errors"
+          f" / {len(results)} combos")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,154 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+"""§Perf hillclimb driver: run a (arch x shape) pair's baseline and a series
+of named variants through the dry-run cost extraction and print the deltas.
+
+  PYTHONPATH=src python -m repro.launch.hillclimb --pair grok_train
+  PYTHONPATH=src python -m repro.launch.hillclimb --pair jamba_train --out results/hc_jamba.json
+
+Each variant records: hypothesis -> change -> before/after terms -> verdict.
+The narrative lands in EXPERIMENTS.md §Perf.
+"""
+import argparse
+import json
+
+from .dryrun import dryrun_one
+
+# variant = (name, hypothesis, overrides/kwargs)
+PAIRS = {
+    # most memory-bound pair: jamba's XLA-path SSD materializes the
+    # (B, n_chunks, L, L, H) within-chunk decay tensor; bytes scale ~ S*L*H
+    "jamba_train": {
+        "arch": "jamba_1p5_large", "shape": "train_4k",
+        "variants": [
+            ("ssd_chunk_128",
+             "decay tensor bytes scale linearly with chunk L (S*L*H f32 words); "
+             "halving L=256->128 should cut SSD intermediate bytes ~2x with "
+             "negligible extra cross-chunk state traffic (S/L states of P*N)",
+             {"overrides": {"ssm_chunk_size": 128}}),
+            ("ssd_chunk_64",
+             "same scaling law, L=64: ~4x fewer decay bytes vs baseline; "
+             "state-passing overhead (S/L * P * N) still << decay savings",
+             {"overrides": {"ssm_chunk_size": 64}}),
+            ("moe_gather",
+             "jamba is also MoE (16e top-2): replacing one-hot dispatch "
+             "einsums by gather/scatter removes the O(S*E*C*D) dispatch "
+             "matmuls and the (B,S,E,C) one-hot bytes",
+             {"overrides": {"moe_dispatch": "gather"}}),
+            ("combined",
+             "chunk=64 + gather dispatch + ZeRO-3 + pinned batch axis "
+             "compose; memory and collective should both drop",
+             {"overrides": {"ssm_chunk_size": 64, "moe_dispatch": "gather",
+                            "act_shard_axes": ("data",)}, "zero3": True}),
+        ],
+    },
+    # most collective-bound pair
+    "grok_train": {
+        "arch": "grok_1_314b", "shape": "train_4k",
+        "variants": [
+            ("moe_gather",
+             "dispatch einsums dominate both FLOPs (S*E*C*D per layer per "
+             "direction) and create resharding all-reduces; gather dispatch "
+             "eliminates them",
+             {"overrides": {"moe_dispatch": "gather"}}),
+            ("ce_onehot",
+             "vocab=131072 logits are 'model'-sharded; take_along_axis forces "
+             "an all-gather of (B,S,V) fp32 logits (~17GB/device-step); "
+             "one-hot contraction keeps vocab sharded (psum of (B,S) scalars)",
+             {"overrides": {"ce_mode": "onehot"}}),
+            ("ff2d_sharding",
+             "per-op drilldown: 23.3TB/step of the collective term is "
+             "all-reduce, ~364GB/layer -- GSPMD partial-sums the (B,E,C,F) "
+             "expert activations because FSDP shards the CONTRACTION dim "
+             "(d_model) of w_up/w_gate. 2D-sharding d_ff over (data,model) "
+             "instead keeps activations sharded; expected all-reduce drop of "
+             "O(F/D)~5x on MoE layers",
+             {"ff2d": True}),
+            ("zero3_block_gather",
+             "ff2d REFUTED: 2D d_ff sharding conflicts with batch-sharded "
+             "activations on the same 'data' axis (GSPMD all-gathers tokens "
+             "instead). Correct ZeRO-3: all-gather the WEIGHTS per block "
+             "just-in-time (with_sharding_constraint inside the scan body) -- "
+             "weights are ~3.2GB/layer vs the ~170GB/layer activation "
+             "partial-sums GSPMD currently emits",
+             {"zero3": True}),
+            ("pin_batch",
+             "zero3 alone did NOT remove the 170GB/layer all-reduce; HLO "
+             "drill shows it appears even without FSDP: GSPMD REPLICATES the "
+             "batch axis in the MoE segment (scatter/one-hot backward). Pin "
+             "the activation batch dim to the 'data' axis with explicit "
+             "sharding constraints inside moe()",
+             {"overrides": {"act_shard_axes": ("data",)}}),
+            ("gather_zero3_pin",
+             "compose: gather dispatch + ZeRO-3 weight gathering + pinned "
+             "batch axis",
+             {"overrides": {"moe_dispatch": "gather",
+                            "act_shard_axes": ("data",)}, "zero3": True}),
+        ],
+    },
+    # paper-representative pair: one DEIS NFE in embedding space
+    "gemma_deis": {
+        "arch": "gemma_2b", "shape": "deis_4k",
+        "variants": [
+            ("control_ce_onehot",
+             "no CE in this workload -- control variant, expect EXACTLY no change",
+             {"overrides": {"ce_mode": "onehot"}}),
+            ("seq_shard_state",
+             "baseline shards the diffusion state x on d_model ('model' axis), "
+             "so every TP matmul resharding moves activations; sequence "
+             "sharding (x over 'model' on the SEQ dim) makes the eps update "
+             "and history buffer fully local and turns attention into a "
+             "kv-all-gather per layer (~67MB vs activation all-reduces)",
+             {"deis_shard": "seq"}),
+            ("pin_na_control",
+             "MoE pin lever is dense-model no-op here -- control",
+             {"overrides": {"act_shard_axes": ("data",)}}),
+        ],
+    },
+}
+
+
+def run_pair(pair_name: str, multi_pod: bool = False):
+    spec = PAIRS[pair_name]
+    out = {"pair": pair_name, "arch": spec["arch"], "shape": spec["shape"],
+           "iterations": []}
+    print(f"=== {pair_name}: BASELINE ===")
+    base = dryrun_one(spec["arch"], spec["shape"], multi_pod=multi_pod,
+                      verbose=False)
+    print(json.dumps(base["roofline"]))
+    out["baseline"] = base
+    prev = base
+    for name, hypothesis, kw in spec["variants"]:
+        print(f"=== {pair_name}: {name} ===")
+        print(f"hypothesis: {hypothesis}")
+        res = dryrun_one(spec["arch"], spec["shape"], multi_pod=multi_pod,
+                         verbose=False, **kw)
+        rb, rv = base["roofline"], res["roofline"]
+        deltas = {k: (None if (rb[k] in (None, 0) or rv[k] is None)
+                      else round(rv[k] / rb[k], 4)) for k in rb}
+        print(f"terms: {json.dumps(rv)}")
+        print(f"vs baseline (ratio): {json.dumps(deltas)}")
+        out["iterations"].append({
+            "name": name, "hypothesis": hypothesis, "result": res,
+            "ratio_vs_baseline": deltas,
+        })
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pair", required=True, choices=sorted(PAIRS))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    res = run_pair(args.pair, args.multi_pod)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(res, f, indent=1)
+        print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

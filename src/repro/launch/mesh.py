@@ -1,0 +1,32 @@
+"""Production mesh builders.
+
+Functions, not module-level constants: importing this module never touches
+jax device state. The dry-run entrypoint (dryrun.py) sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` BEFORE importing jax.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (16, 16) ('data','model') = 256 chips.
+    Multi-pod:  (2, 16, 16) ('pod','data','model') = 512 chips."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: int = 1):
+    """Degenerate mesh over however many devices this host actually has
+    (tests / examples on CPU)."""
+    n = jax.device_count()
+    assert n % model == 0
+    return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+# TPU v5e-ish hardware constants for the roofline model (per chip).
+PEAK_FLOPS_BF16 = 197e12      # FLOP/s
+HBM_BW = 819e9                # bytes/s
+ICI_BW = 50e9                 # bytes/s per link (~per-chip usable bisection)

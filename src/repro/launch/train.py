@@ -1,0 +1,93 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch gemma_2b --reduced \
+        --steps 50 --batch 8 --seq 64 [--objective diffusion|ar] \
+        [--ckpt-dir ckpts/run1] [--model-parallel 1]
+
+On this CPU host the mesh is (n_devices/model, model); on a real cluster the
+same script runs under the production mesh (launch/mesh.py).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import get_config
+from ..data.pipeline import MarkovTextSource, make_batch
+from ..models import transformer as T
+from ..sharding import rules as R
+from ..training import checkpoint as CKPT
+from ..training.optimizer import AdamW, cosine_schedule
+from ..training.steps import make_train_step
+from .mesh import make_host_mesh
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--objective", default="diffusion")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    cfg = cfg.with_(objective=args.objective)
+    mesh = make_host_mesh(model=args.model_parallel)
+    print(f"arch={cfg.name} objective={cfg.objective} mesh={dict(mesh.shape)}")
+
+    params = T.init_params(cfg, jax.random.PRNGKey(args.seed))
+    opt = AdamW(cosine_schedule(args.lr, max(1, args.steps // 10), args.steps))
+    opt_state = opt.init(params)
+
+    shape_of = lambda t: jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype), t)
+    pspec = R.param_specs(shape_of(params), mesh)
+    psh = R.to_shardings(pspec, mesh)
+    osh = R.to_shardings(R.opt_state_specs(shape_of(opt_state), pspec, mesh), mesh)
+    step = jax.jit(make_train_step(cfg, opt), in_shardings=(psh, osh, None, None),
+                   donate_argnums=(0, 1))
+
+    start = 0
+    if args.ckpt_dir and CKPT.latest_step(args.ckpt_dir) is not None:
+        (params, opt_state), meta = CKPT.restore(args.ckpt_dir,
+                                                 (params, opt_state))
+        start = meta.get("next_step", 0)
+        print(f"restored checkpoint at step {start}")
+
+    src = MarkovTextSource(cfg.vocab_size, args.seed)
+    rng = jax.random.PRNGKey(args.seed + 1)
+    t0 = time.time()
+    with mesh:
+        for i in range(start, args.steps):
+            batch = {k: jnp.asarray(v) for k, v in
+                     make_batch(cfg, src, i, args.batch, args.seq).items()}
+            rng, sub = jax.random.split(rng)
+            params, opt_state, m = step(params, opt_state, batch, sub)
+            if i % max(1, args.steps // 10) == 0:
+                print(f"step {i:5d} loss={float(m['loss']):.4f} "
+                      f"gnorm={float(m['grad_norm']):.3f} "
+                      f"({(time.time() - t0):.1f}s)")
+            if args.ckpt_dir and args.ckpt_every and \
+                    (i + 1) % args.ckpt_every == 0:
+                CKPT.save(args.ckpt_dir, i + 1, (params, opt_state),
+                          {"next_step": i + 1, "arch": cfg.name})
+    if args.ckpt_dir:
+        CKPT.save(args.ckpt_dir, args.steps, (params, opt_state),
+                  {"next_step": args.steps, "arch": cfg.name})
+        print(f"final checkpoint -> {args.ckpt_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,183 @@
+"""Mamba2 / SSD layer (arXiv:2405.21060), TPU-adapted.
+
+State-space duality form with scalar-per-head decay:
+
+    h_t = a_t h_{t-1} + b_t x_t^T      (per head: h in R^{P x N})
+    y_t = C_t h_t
+
+Training/prefill uses the CHUNKED algorithm (the paper's SSD): within-chunk
+quadratic attention-like term (MXU matmuls) + across-chunk state recurrence
+(lax.scan over chunks). Decode is the O(1) recurrent update. This is the
+TPU-native rethink of the CUDA selective-scan: all heavy ops are dense
+matmuls over (chunk x chunk) and (P x N) tiles, MXU-friendly; the sequential
+part is only n_chunks long. A Pallas kernel version lives in repro/kernels.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+
+
+def ssm_dims(cfg: ModelConfig):
+    d_inner = cfg.ssm.expand * cfg.d_model
+    n_heads = d_inner // cfg.ssm.head_dim
+    return d_inner, n_heads
+
+
+def init_ssm(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    scfg = cfg.ssm
+    d_inner, n_heads = ssm_dims(cfg)
+    n = scfg.state_dim
+    ks = jax.random.split(key, 6)
+    s = 1.0 / math.sqrt(d)
+    # in_proj produces [z (gate), x, B, C, dt] along features
+    proj_out = 2 * d_inner + 2 * n + n_heads
+    return {
+        "in_proj": (jax.random.normal(ks[0], (d, proj_out)) * s).astype(dtype),
+        "conv_w": (jax.random.normal(ks[1], (scfg.conv_width, d_inner + 2 * n)) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((d_inner + 2 * n,), dtype),
+        "A_log": jnp.zeros((n_heads,), jnp.float32),        # A = -exp(A_log)
+        "dt_bias": jnp.full((n_heads,), math.log(math.e - 1), jnp.float32),
+        "D": jnp.ones((n_heads,), jnp.float32),
+        "norm_scale": jnp.zeros((d_inner,), dtype),
+        "out_proj": (jax.random.normal(ks[2], (d_inner, d)) * s / math.sqrt(2 * cfg.n_layers)).astype(dtype),
+    }
+
+
+def _split_proj(cfg, zxbcdt):
+    d_inner, n_heads = ssm_dims(cfg)
+    n = cfg.ssm.state_dim
+    z, xbc, dt = jnp.split(zxbcdt, [d_inner, 2 * d_inner + 2 * n], axis=-1)
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, w, b, state=None):
+    """Depthwise causal conv, width K. xbc: (B,S,C). state: (B,K-1,C) or None.
+    Returns (out, new_state)."""
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros(xbc.shape[:1] + (k - 1,) + xbc.shape[2:], xbc.dtype)
+    else:
+        pad = state
+    xp = jnp.concatenate([pad, xbc], axis=1)               # (B, S+K-1, C)
+    out = sum(xp[:, i:i + xbc.shape[1]] * w[i] for i in range(k)) + b
+    new_state = xp[:, -(k - 1):] if k > 1 else None
+    return jax.nn.silu(out.astype(jnp.float32)).astype(xbc.dtype), new_state
+
+
+def ssd_chunked(x, a, B, C, chunk: int):
+    """SSD chunked scan.
+
+    x: (B, S, H, P) inputs; a: (B, S, H) per-step decay in (0,1);
+    B, C: (B, S, N) shared across heads (multi-value attention analogy).
+    Returns y: (B, S, H, P) and final state (B, H, P, N).
+    """
+    bsz, s, h, p = x.shape
+    n = B.shape[-1]
+    if s % chunk:
+        # pad seq to a chunk multiple with identity (a=1, x=0) steps at the end
+        pad = chunk - s % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)), constant_values=1.0)
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+        y, final = ssd_chunked(x, a, B, C, chunk)
+        return y[:, :s], final
+    nc = s // chunk
+    xr = x.reshape(bsz, nc, chunk, h, p)
+    ar = a.reshape(bsz, nc, chunk, h)
+    Br = B.reshape(bsz, nc, chunk, n)
+    Cr = C.reshape(bsz, nc, chunk, n)
+
+    log_a = jnp.log(ar.astype(jnp.float32))                # (B,nc,L,H)
+    cum = jnp.cumsum(log_a, axis=2)                        # inclusive cumsum
+    # within-chunk: y_intra[t] = sum_{u<=t} C_t . B_u * exp(cum_t - cum_u) x_u
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]    # (B,nc,T,U,H)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    decay = jnp.where(tri[None, None, :, :, None], jnp.exp(seg), 0.0)
+    scores = jnp.einsum("bctn,bcun->bctu", Cr.astype(jnp.float32), Br.astype(jnp.float32))
+    w = scores[..., None] * decay                          # (B,nc,T,U,H)
+    y_intra = jnp.einsum("bctuh,bcuhp->bcthp", w, xr.astype(jnp.float32))
+
+    # chunk summaries: S_c = sum_u exp(cum_last - cum_u) B_u x_u^T
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)        # (B,nc,L,H)
+    chunk_state = jnp.einsum("bcuh,bcun,bcuhp->bchpn",
+                             decay_to_end, Br.astype(jnp.float32), xr.astype(jnp.float32))
+    a_chunk = jnp.exp(cum[:, :, -1, :])                    # (B,nc,H) total decay
+
+    # recurrence across chunks
+    def step(carry, inp):
+        s_prev = carry                                      # (B,H,P,N)
+        s_c, a_c = inp
+        s_new = s_prev * a_c[..., None, None] + s_c
+        return s_new, s_prev
+
+    init = jnp.zeros((bsz, h, p, n), jnp.float32)
+    final, prev_states = jax.lax.scan(
+        step, init, (jnp.moveaxis(chunk_state, 1, 0), jnp.moveaxis(a_chunk, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)           # (B,nc,H,P,N)
+
+    # inter-chunk: y_inter[t] = C_t . (decay_from_start_t * S_{c-1})
+    decay_from_start = jnp.exp(cum)                         # (B,nc,L,H)
+    y_inter = jnp.einsum("bctn,bcth,bchpn->bcthp",
+                         Cr.astype(jnp.float32), decay_from_start, prev_states)
+
+    y = (y_intra + y_inter).reshape(bsz, s, h, p)
+    return y, final
+
+
+def ssm_forward(params, cfg: ModelConfig, x, *, cache=None, use_pallas: bool = False):
+    """Full Mamba2 mixer. x: (B, S, D).
+
+    cache: None (train/prefill) or dict {conv: (B,K-1,C), state: (B,H,P,N)}
+    for O(1) decode (S must be 1). Returns (out, new_cache).
+    """
+    bsz, s, _ = x.shape
+    scfg = cfg.ssm
+    d_inner, n_heads = ssm_dims(cfg)
+    n, p = scfg.state_dim, scfg.head_dim
+
+    zxbcdt = jnp.einsum("bsd,de->bse", x, params["in_proj"]).astype(x.dtype)
+    z, xbc, dt = _split_proj(cfg, zxbcdt)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])   # (B,S,H)
+    A = -jnp.exp(params["A_log"])                                       # (H,)
+    a = jnp.exp(dt * A)                                                 # decay in (0,1)
+
+    if cache is None:
+        xbc, conv_state = _causal_conv(xbc, params["conv_w"], params["conv_b"])
+        xs, B, C = jnp.split(xbc, [d_inner, d_inner + n], axis=-1)
+        xh = xs.reshape(bsz, s, n_heads, p)
+        if use_pallas:
+            from ..kernels.ops import ssd_scan as _ssd
+            y, state = _ssd(xh, a, B, C, chunk=min(scfg.chunk_size, s))
+        else:
+            y, state = ssd_chunked(xh, a, B, C, chunk=min(scfg.chunk_size, s))
+        new_cache = {"conv": conv_state, "state": state}
+    else:
+        assert s == 1
+        xbc, conv_state = _causal_conv(xbc, params["conv_w"], params["conv_b"],
+                                       state=cache["conv"])
+        xs, B, C = jnp.split(xbc, [d_inner, d_inner + n], axis=-1)
+        xh = xs.reshape(bsz, 1, n_heads, p).astype(jnp.float32)
+        a1 = a[:, 0]                                                    # (B,H)
+        st = cache["state"]                                             # (B,H,P,N)
+        st = st * a1[..., None, None] + jnp.einsum(
+            "bn,bhp->bhpn", B[:, 0].astype(jnp.float32), xh[:, 0])
+        y = jnp.einsum("bn,bhpn->bhp", C[:, 0].astype(jnp.float32), st)[:, None]
+        state = st
+        new_cache = {"conv": conv_state, "state": state}
+
+    y = y + params["D"][None, None, :, None] * (xs.reshape(bsz, s, n_heads, p).astype(jnp.float32))
+    y = y.reshape(bsz, s, d_inner)
+    # gated RMSNorm (mamba2)
+    var = jnp.mean(jnp.square(y), axis=-1, keepdims=True)
+    y = y * jax.lax.rsqrt(var + cfg.norm_eps)
+    y = y * (1.0 + params["norm_scale"].astype(jnp.float32))
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    out = jnp.einsum("bse,ed->bsd", y.astype(x.dtype), params["out_proj"])
+    return out, new_cache

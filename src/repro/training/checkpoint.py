@@ -1,0 +1,78 @@
+"""Checkpointing: pytree -> .npz (arrays) + .json (treedef/metadata).
+
+No orbax offline; this is a complete, restart-safe implementation with atomic
+writes and step-indexed directories.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    paths = ["/".join(str(p) for p in path) for path, _ in leaves]
+    arrs = [np.asarray(leaf) for _, leaf in leaves]
+    return paths, arrs, treedef
+
+
+def save(ckpt_dir: str, step: int, tree, metadata: dict | None = None) -> str:
+    """Atomically write a checkpoint; returns the step directory."""
+    paths, arrs, _ = _flatten(tree)
+    step_dir = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = tempfile.mkdtemp(dir=ckpt_dir if os.path.isdir(ckpt_dir) else None)
+    os.makedirs(ckpt_dir, exist_ok=True)
+    np.savez(os.path.join(tmp, "arrays.npz"),
+             **{f"a{i}": a for i, a in enumerate(arrs)})
+    manifest = {
+        "paths": paths,
+        "dtypes": [str(a.dtype) for a in arrs],
+        "shapes": [list(a.shape) for a in arrs],
+        "step": step,
+        "metadata": metadata or {},
+    }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.isdir(step_dir):
+        shutil.rmtree(step_dir)
+    os.replace(tmp, step_dir)
+    return step_dir
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+             if d.startswith("step_")]
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, like, step: int | None = None):
+    """Restore into the structure of ``like`` (a pytree of arrays or shapes)."""
+    step = latest_step(ckpt_dir) if step is None else step
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    step_dir = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(step_dir, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(step_dir, "arrays.npz"))
+    arrs = [data[f"a{i}"] for i in range(len(manifest["paths"]))]
+
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(like)
+    want_paths = ["/".join(str(p) for p in path) for path, _ in leaves]
+    by_path = dict(zip(manifest["paths"], arrs))
+    out_leaves = []
+    for path, leaf in zip(want_paths, (l for _, l in leaves)):
+        if path not in by_path:
+            raise KeyError(f"checkpoint missing {path}")
+        arr = by_path[path]
+        dtype = leaf.dtype if hasattr(leaf, "dtype") else arr.dtype
+        out_leaves.append(jnp.asarray(arr, dtype=dtype))
+    return jax.tree_util.tree_unflatten(jax.tree_util.tree_structure(like), out_leaves), \
+        manifest["metadata"]

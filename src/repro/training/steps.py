@@ -1,0 +1,122 @@
+"""Jittable train / serve step builders used by the launcher and the dry-run.
+
+Semantics per assigned input shape:
+  train_*   -> ``train_step``: one optimizer step on the configured objective
+               ('diffusion' = paper-native eps-matching, 'ar' = causal LM).
+  prefill_* -> ``prefill_step``: full-sequence forward producing logits + KV.
+  decode_*  -> ``decode_step``: ONE new token against a seq_len cache.
+Plus ``deis_sample_step``: one DEIS solver NFE in embedding space (the paper's
+technique as a serving workload).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..core.sde import SDE, VPSDE
+from ..diffusion import lm as DLM
+from ..models import transformer as T
+from .optimizer import AdamW
+
+
+def cross_entropy(logits, targets, cfg: ModelConfig):
+    """Token CE. cfg.ce_mode:
+    'gather' -- log_softmax + take_along_axis (baseline; all-gathers
+                vocab-sharded logits to resolve the gather).
+    'onehot' -- logsumexp + one-hot CONTRACTION over vocab: the contraction
+                dim may stay sharded (partial-sum all-reduce of (B,S) scalars
+                instead of an all-gather of (B,S,V) logits)."""
+    logits = logits.astype(jnp.float32)
+    if cfg.ce_mode == "onehot":
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        onehot = jax.nn.one_hot(targets, logits.shape[-1], dtype=jnp.float32)
+        picked = jnp.sum(logits * onehot, axis=-1)
+        return jnp.mean(lse - picked)
+    logp = jax.nn.log_softmax(logits, -1)
+    return -jnp.mean(jnp.take_along_axis(logp, targets[..., None], axis=-1))
+
+
+def ar_loss(params, cfg: ModelConfig, tokens, *, prefix=None, frames=None,
+            remat: bool = False, unroll: int = 1, block_constraint=None):
+    out = T.forward(params, cfg, tokens=tokens, mode="train", causal=True,
+                    prefix=prefix, frames=frames, remat=remat, unroll=unroll,
+                    block_constraint=block_constraint)
+    logits = out["logits"]
+    if cfg.arch_type == "vlm" and prefix is not None:
+        logits = logits[:, prefix.shape[1]:]
+    loss = cross_entropy(logits[:, :-1], tokens[:, 1:], cfg)
+    aux = sum(out["aux"].values()) if out["aux"] else 0.0
+    return loss + aux, {"loss": loss, "ppl": jnp.exp(loss)}
+
+
+def make_loss_fn(cfg: ModelConfig, sde: Optional[SDE] = None, remat=False,
+                 unroll: int = 1, block_constraint=None):
+    """remat: False | 'block' (jax.checkpoint per scan block -- production
+    memory profile) | 'loss' (checkpoint the whole loss -- cheap to compile,
+    used for the full-depth dry-run lowering proof)."""
+    sde = sde or VPSDE()
+    block_remat = remat == "block" or remat is True
+
+    def loss_fn(params, batch, rng):
+        kw = {k: batch[k] for k in ("prefix", "frames") if k in batch}
+        if cfg.objective == "diffusion":
+            return DLM.diffusion_loss(params, cfg, sde, batch["tokens"], rng,
+                                      remat=block_remat, unroll=unroll,
+                                      block_constraint=block_constraint, **kw)
+        return ar_loss(params, cfg, batch["tokens"], remat=block_remat,
+                       unroll=unroll, block_constraint=block_constraint, **kw)
+
+    if remat == "loss":
+        return jax.checkpoint(loss_fn)
+    return loss_fn
+
+
+def make_train_step(cfg: ModelConfig, opt: AdamW, sde: Optional[SDE] = None,
+                    remat=False, unroll: int = 1, block_constraint=None):
+    loss_fn = make_loss_fn(cfg, sde, remat=remat, unroll=unroll,
+                           block_constraint=block_constraint)
+
+    def train_step(params, opt_state, batch, rng):
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch, rng)
+        params, opt_state, opt_metrics = opt.update(grads, opt_state, params)
+        metrics = dict(metrics, **opt_metrics)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, unroll: int = 1):
+    def prefill_step(params, batch):
+        kw = {k: batch[k] for k in ("prefix", "frames") if k in batch}
+        out = T.forward(params, cfg, tokens=batch["tokens"], mode="prefill",
+                        causal=True, unroll=unroll, **kw)
+        return out["logits"][:, -1], out["cache"]
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, unroll: int = 1):
+    def decode_step(params, cache, token, cache_index):
+        out = T.forward(params, cfg, tokens=token, mode="decode", causal=True,
+                        cache=cache, cache_index=cache_index, unroll=unroll)
+        return out["logits"][:, -1], out["cache"]
+    return decode_step
+
+
+def make_deis_sample_step(cfg: ModelConfig, sde: Optional[SDE] = None,
+                          unroll: int = 1):
+    """One DEIS NFE: eps eval + fused multistep update (paper Eq. 14)."""
+    sde = sde or VPSDE()
+
+    def deis_step(params, x, eps_hist, t, psi_k, coeff_row):
+        eps_fn = DLM.make_eps_fn(params, cfg, unroll=unroll)
+        eps = eps_fn(x, t)
+        hist = jnp.concatenate([eps[None], eps_hist[:-1]], axis=0)
+        x_next = psi_k * x + jnp.tensordot(coeff_row, hist, axes=1)
+        return x_next, hist
+
+    return deis_step

@@ -1,0 +1,11 @@
+import jax
+import pytest
+
+# float64 for numerical-analysis tests (solver orders, coefficient identities).
+# Model/kernel tests explicitly cast to float32/bfloat16 where relevant.
+jax.config.update("jax_enable_x64", True)
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.PRNGKey(0)

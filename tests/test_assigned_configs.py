@@ -1,0 +1,77 @@
+"""Pin the EXACT assigned architecture configurations (public-pool citations).
+Any drift from the assignment sheet fails here."""
+import pytest
+
+from repro.configs.base import get_config
+
+EXPECTED = {
+    # arch: (layers, d_model, heads, kv, d_ff, vocab)
+    "whisper_tiny": (4, 384, 6, 6, 1536, 51865),
+    "h2o_danube_3_4b": (24, 3840, 32, 8, 10240, 32000),
+    "paligemma_3b": (18, 2048, 8, 1, 16384, 257216),
+    "mixtral_8x7b": (32, 4096, 32, 8, 14336, 32000),
+    "grok_1_314b": (64, 6144, 48, 8, 32768, 131072),
+    "mamba2_2p7b": (64, 2560, 1, 1, 0, 50280),
+    "glm4_9b": (40, 4096, 32, 2, 13696, 151552),
+    "gemma_2b": (18, 2048, 8, 1, 16384, 256000),
+    "granite_3_8b": (40, 4096, 32, 8, 12800, 49155),
+    "jamba_1p5_large": (72, 8192, 64, 8, 24576, 65536),
+}
+
+
+@pytest.mark.parametrize("arch", sorted(EXPECTED))
+def test_assigned_numbers(arch):
+    cfg = get_config(arch)
+    l, d, h, kv, ff, v = EXPECTED[arch]
+    assert cfg.n_layers == l
+    assert cfg.d_model == d
+    assert cfg.n_heads == h
+    assert cfg.n_kv_heads == kv
+    assert cfg.d_ff == ff
+    assert cfg.vocab_size == v
+    assert cfg.source  # must cite the pool entry
+
+
+def test_moe_settings():
+    mix = get_config("mixtral_8x7b")
+    assert mix.moe.num_experts == 8 and mix.moe.top_k == 2
+    assert mix.sliding_window == 4096
+    grok = get_config("grok_1_314b")
+    assert grok.moe.num_experts == 8 and grok.moe.top_k == 2
+    jam = get_config("jamba_1p5_large")
+    assert jam.moe.num_experts == 16 and jam.moe.top_k == 2
+    assert jam.attn_every == 8  # 1:7 mamba:attention
+
+
+def test_ssm_settings():
+    m = get_config("mamba2_2p7b")
+    assert m.ssm.state_dim == 128
+    assert m.arch_type == "ssm"
+
+
+def test_frontend_stubs():
+    w = get_config("whisper_tiny")
+    assert w.arch_type == "encdec" and w.encoder_seq == 1500
+    p = get_config("paligemma_3b")
+    assert p.arch_type == "vlm" and p.prefix_tokens == 256
+    assert p.resolved_head_dim == 256  # gemma-style
+
+
+def test_param_counts_roughly_match_names():
+    """Sanity: total parameter counts land near the advertised sizes."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.models.transformer import init_params
+
+    def count(arch):
+        cfg = get_config(arch).with_(objective="ar")
+        shapes = jax.eval_shape(lambda k: init_params(cfg, k),
+                                jax.ShapeDtypeStruct((2,), jnp.uint32))
+        return sum(int(np.prod(l.shape)) for l in jax.tree.leaves(shapes))
+
+    assert 250e9 < count("grok_1_314b") < 380e9
+    assert 35e9 < count("mixtral_8x7b") < 55e9
+    assert 2.0e9 < count("gemma_2b") < 3.2e9
+    assert 2.2e9 < count("mamba2_2p7b") < 3.4e9
+    assert 300e9 < count("jamba_1p5_large") < 480e9

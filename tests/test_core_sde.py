@@ -1,0 +1,83 @@
+"""SDE schedule self-consistency + schedule properties (unit + property tests)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import VPSDE, VESDE, SubVPSDE, get_sde, get_timesteps, SCHEDULES
+
+SDES = [VPSDE(), VESDE(sigma_max=50.0), SubVPSDE()]
+
+
+@pytest.mark.parametrize("sde", SDES, ids=lambda s: type(s).__name__)
+class TestSDEConsistency:
+    def test_drift_matches_mu(self, sde):
+        """f(t) must equal d log mu / dt (the EI linear term is exact only then)."""
+        t = np.linspace(0.05, 0.95, 9)
+        h = 1e-6
+        f_num = (np.log(sde.mu(t + h)) - np.log(sde.mu(t - h))) / (2 * h)
+        np.testing.assert_allclose(sde.f(t), f_num, rtol=1e-6, atol=1e-7)
+
+    def test_diffusion_matches_sigma(self, sde):
+        """g^2 = d sigma^2/dt - 2 f sigma^2 (forward variance evolution)."""
+        t = np.linspace(0.05, 0.95, 9)
+        h = 1e-6
+        ds2 = (sde.sigma(t + h) ** 2 - sde.sigma(t - h) ** 2) / (2 * h)
+        np.testing.assert_allclose(sde.g2(t), ds2 - 2 * sde.f(t) * sde.sigma(t) ** 2,
+                                   rtol=1e-4, atol=1e-6)
+
+    def test_rho_roundtrip(self, sde):
+        t = np.linspace(0.02, 0.98, 17)
+        np.testing.assert_allclose(sde.t_of_rho(sde.rho(t)), t, rtol=1e-8, atol=1e-8)
+
+    def test_rho_monotone_increasing(self, sde):
+        t = np.linspace(0.01, 1.0, 50)
+        assert np.all(np.diff(sde.rho(t)) > 0)
+
+
+def test_vpsde_alpha_bar_limits():
+    sde = VPSDE()
+    assert abs(sde.alpha_bar(0.0) - 1.0) < 1e-12
+    assert sde.alpha_bar(1.0) < 5e-5  # alpha_T ~ 0 (paper Tab. 1)
+    assert abs(sde.prior_std() - 1.0) < 1e-12
+
+
+def test_get_sde_factory():
+    assert isinstance(get_sde("vp"), VPSDE)
+    assert isinstance(get_sde("ve"), VESDE)
+    with pytest.raises(ValueError):
+        get_sde("nope")
+
+
+@pytest.mark.parametrize("name", sorted(SCHEDULES))
+@pytest.mark.parametrize("sde", SDES, ids=lambda s: type(s).__name__)
+def test_schedules_decreasing_with_endpoints(name, sde, subtests=None):
+    ts = get_timesteps(sde, 17, name)
+    assert len(ts) == 18
+    assert ts[0] == pytest.approx(sde.T)
+    assert ts[-1] == pytest.approx(sde.t0, rel=1e-6)
+    assert np.all(np.diff(ts) < 0)
+
+
+@settings(max_examples=30, deadline=None)
+@given(n=st.integers(4, 200), kappa=st.floats(1.0, 8.0),
+       t0=st.floats(1e-5, 1e-2))
+def test_power_t_schedule_properties(n, kappa, t0):
+    from repro.core.schedules import power_t
+    sde = VPSDE()
+    ts = power_t(sde, n, t0, kappa)
+    assert np.all(np.diff(ts) < 0)
+    assert ts[0] == pytest.approx(sde.T) and ts[-1] == pytest.approx(t0, rel=1e-6)
+    if kappa > 1.001:
+        # larger kappa concentrates steps near t0 (Ingredient 4 rationale)
+        steps = -np.diff(ts)
+        assert steps[-1] < steps[0]
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(4, 100))
+def test_log_rho_is_geometric_in_rho(n):
+    sde = VESDE(sigma_max=50.0)
+    ts = get_timesteps(sde, n, "log_rho")
+    rho = sde.rho(ts)
+    ratios = rho[1:] / rho[:-1]
+    np.testing.assert_allclose(ratios, ratios[0], rtol=1e-6)

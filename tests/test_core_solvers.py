@@ -1,0 +1,214 @@
+"""Solver correctness: Prop. 2, convergence orders, paper-claim orderings.
+
+These are the *faithful reproduction* gates: each test pins one of the paper's
+mathematical claims (not a vibe -- an assertion).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (VPSDE, VESDE, get_timesteps, ab_coefficients,
+                        ddim_coefficients_vp, make_solver)
+from repro.core.coeffs import AB_WEIGHTS
+from repro.diffusion.analytic import GaussianData, default_gmm
+
+SDE = VPSDE()
+
+
+def _gaussian_problem(d=4, batch=64):
+    g = GaussianData(SDE, mean=np.full(d, 1.5), var=np.full(d, 0.25))
+    xT = jax.random.normal(jax.random.PRNGKey(0), (batch, d)) * SDE.prior_std()
+    exact = g.exact_flow(xT, SDE.T, SDE.t0)
+    return g.eps_fn(), xT, exact
+
+
+def _err(solver_name, eps, xT, exact, n, schedule="uniform"):
+    s = make_solver(solver_name, SDE, get_timesteps(SDE, n, schedule))
+    return float(jnp.sqrt(jnp.mean((s.sample(eps, xT) - exact) ** 2)))
+
+
+# ---------------------------------------------------------------- Prop. 2
+def test_prop2_tab0_equals_closed_form_ddim():
+    """tAB-DEIS with r=0 == deterministic DDIM, to machine precision."""
+    for schedule in ("uniform", "quadratic", "log_rho"):
+        ts = get_timesteps(SDE, 13, schedule)
+        p1, c1 = ab_coefficients(SDE, ts, 0, "t")
+        p2, c2 = ddim_coefficients_vp(SDE, ts)
+        np.testing.assert_allclose(p1, p2, rtol=1e-12)
+        np.testing.assert_allclose(c1, c2, rtol=0, atol=1e-13)
+
+
+def test_tab0_equals_rhoab0():
+    """Zero-order: basis choice is irrelevant (constant polynomial)."""
+    ts = get_timesteps(SDE, 9, "quadratic")
+    _, ct = ab_coefficients(SDE, ts, 0, "t")
+    _, cr = ab_coefficients(SDE, ts, 0, "rho")
+    np.testing.assert_allclose(ct, cr, rtol=1e-12)
+
+
+def test_ddim_eta0_equals_tab0_samples():
+    eps, xT, _ = _gaussian_problem()
+    ts = get_timesteps(SDE, 10, "quadratic")
+    a = make_solver("ddim", SDE, ts).sample(eps, xT)
+    b = make_solver("ddim_eta", SDE, ts, eta=0.0).sample(eps, xT, jax.random.PRNGKey(1))
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-9, atol=1e-9)
+
+
+# ------------------------------------------------------- convergence orders
+@pytest.mark.parametrize("name,expected,tol", [
+    ("ddim", 1.0, 0.25), ("tab1", 2.0, 0.45), ("tab2", 3.0, 0.6),
+    ("rhoab1", 2.0, 0.45), ("rhoab2", 3.0, 0.6),
+    ("rho_heun", 2.0, 0.25), ("rho_midpoint", 2.0, 0.3),
+    ("rho_kutta3", 3.0, 0.4), ("euler", 1.0, 0.3), ("naive_ei", 1.0, 0.25),
+    ("dpm2", 2.0, 0.3),
+])
+def test_convergence_order(name, expected, tol):
+    """Order of accuracy on the exactly-solvable Gaussian PF-ODE."""
+    eps, xT, exact = _gaussian_problem()
+    errs = [_err(name, eps, xT, exact, n) for n in (8, 16, 32)]
+    orders = [np.log2(errs[i] / errs[i + 1]) for i in range(2)]
+    # one-sided with superconvergence allowance (midpoint gains an order on
+    # symmetric linear problems)
+    assert np.mean(orders) > expected - tol, (errs, orders)
+    assert np.mean(orders) < expected + 1.3, (errs, orders)
+
+
+def test_high_order_beats_ddim_at_low_nfe():
+    """Paper: 'DEIS with high-order polynomial approximation significantly
+    outperforms DDIM' (Tab. 2)."""
+    eps, xT, exact = _gaussian_problem()
+    for n in (5, 10, 20):
+        e0 = _err("ddim", eps, xT, exact, n, "quadratic")
+        e3 = _err("tab3", eps, xT, exact, n, "quadratic")
+        assert e3 < e0, (n, e0, e3)
+        assert _err("tab2", eps, xT, exact, n, "quadratic") < e0
+
+
+def test_order_monotonicity_tab():
+    """tAB3 <= tAB2 <= tAB1 <= tAB0 at N=10 (paper Tab. 2 column ordering)."""
+    eps, xT, exact = _gaussian_problem()
+    errs = [_err(f"tab{r}" if r else "ddim", eps, xT, exact, 10, "quadratic")
+            for r in range(4)]
+    assert errs[3] < errs[2] < errs[1] < errs[0], errs
+
+
+def test_fig3_ordering_naive_ei_vs_euler_vs_eps_ei():
+    """Fig. 3 / Ingredients 1-2 on concentrated data (paper Fig. 2 toy:
+    'Gaussian concentrated with a very small variance'): naive EI (score
+    parameterization, frozen L_t) is WORSE than Euler, while EI with the
+    eps-parameterization (== DDIM) is far better than both."""
+    d = 4
+    g = GaussianData(SDE, mean=np.full(d, 1.5), var=np.full(d, 1e-4))
+    eps = g.eps_fn()
+    xT = jax.random.normal(jax.random.PRNGKey(0), (64, d)) * SDE.prior_std()
+    exact = g.exact_flow(xT, SDE.T, SDE.t0)
+    for n in (10, 20, 40):
+        e_naive = _err("naive_ei", eps, xT, exact, n)
+        e_euler = _err("euler", eps, xT, exact, n)
+        e_ddim = _err("ddim", eps, xT, exact, n)
+        assert e_naive > e_euler > e_ddim, (n, e_naive, e_euler, e_ddim)
+
+
+def test_quadratic_schedule_beats_uniform_at_low_nfe():
+    """Ingredient 4 on the GMM (rapid score change near t=0 matters there)."""
+    gmm = default_gmm(SDE, d=2)
+    eps = gmm.eps_fn()
+    xT = jax.random.normal(jax.random.PRNGKey(2), (256, 2)) * SDE.prior_std()
+    ref = make_solver("rho_rk4", SDE, get_timesteps(SDE, 400, "log_rho")).sample(eps, xT)
+    def err(sched):
+        x = make_solver("tab2", SDE, get_timesteps(SDE, 10, sched)).sample(eps, xT)
+        return float(jnp.sqrt(jnp.mean((x - ref) ** 2)))
+    assert err("quadratic") < err("uniform")
+
+
+# ----------------------------------------------------------- SDE samplers
+def test_em_sampler_distribution_moments():
+    """Euler-Maruyama (lambda=1) reproduces Gaussian data moments with many steps."""
+    d = 2
+    g = GaussianData(SDE, mean=np.full(d, 1.0), var=np.full(d, 0.3))
+    eps = g.eps_fn()
+    xT = jax.random.normal(jax.random.PRNGKey(3), (4096, d))
+    s = make_solver("em", SDE, get_timesteps(SDE, 200, "uniform"))
+    x0 = s.sample(eps, xT, key=jax.random.PRNGKey(4))
+    assert np.allclose(np.asarray(x0).mean(0), 1.0, atol=0.08)
+    assert np.allclose(np.asarray(x0).var(0), 0.3, atol=0.08)
+
+
+def test_stochastic_ddim_moments():
+    d = 2
+    g = GaussianData(SDE, mean=np.full(d, -0.5), var=np.full(d, 0.5))
+    eps = g.eps_fn()
+    xT = jax.random.normal(jax.random.PRNGKey(5), (4096, d))
+    s = make_solver("ddim_eta", SDE, get_timesteps(SDE, 100, "quadratic"), eta=1.0)
+    x0 = s.sample(eps, xT, key=jax.random.PRNGKey(6))
+    assert np.allclose(np.asarray(x0).mean(0), -0.5, atol=0.08)
+    assert np.allclose(np.asarray(x0).var(0), 0.5, atol=0.1)
+
+
+# ------------------------------------------------------------- iPNDM/PNDM
+def test_ipndm_matches_paper_ab_weights():
+    np.testing.assert_allclose(AB_WEIGHTS[3], np.array([55, -59, 37, -9]) / 24.0)
+    np.testing.assert_allclose(AB_WEIGHTS[2], np.array([23, -16, 5]) / 12.0)
+
+
+def test_ipndm_beats_ddim():
+    eps, xT, exact = _gaussian_problem()
+    assert _err("ipndm3", eps, xT, exact, 10) < _err("ddim", eps, xT, exact, 10)
+
+
+def test_pndm_nfe_accounting():
+    ts = get_timesteps(SDE, 20, "uniform")
+    assert make_solver("pndm", SDE, ts).nfe == 20 + 9
+    assert make_solver("ipndm3", SDE, ts).nfe == 20
+    assert make_solver("rho_heun", SDE, ts).nfe == 40
+    assert make_solver("rho_rk4", SDE, ts).nfe == 80
+
+
+# --------------------------------------------------------------- property
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(4, 60), order=st.integers(0, 3),
+       basis=st.sampled_from(["t", "rho"]),
+       schedule=st.sampled_from(["uniform", "quadratic", "log_rho"]))
+def test_ab_coefficient_polynomial_exactness(n, order, basis, schedule):
+    """The defining property of the DEIS-AB coefficients (Eq. 15): for any
+    polynomial p of degree <= r in the basis variable,
+
+        sum_j C[k, j] p(u_{k-j}) == mu(t_{k+1}) * \\int p(u(rho)) drho
+
+    over each step interval -- i.e. the C_j are the exact EI-weighted
+    integrals of the Lagrange interpolant."""
+    sde = VPSDE()
+    ts = get_timesteps(sde, n, schedule)
+    _, C = ab_coefficients(sde, ts, order, basis)
+    rho = np.asarray(sde.rho(ts))
+    mu = np.asarray(sde.mu(ts))
+    rng = np.random.RandomState(order * 101 + n)
+    pcoef = rng.randn(order + 1)
+    p = lambda u: sum(c * u ** k for k, c in enumerate(pcoef))
+    from repro.core.coeffs import _gauss_legendre
+    for k in range(order, min(n, order + 6)):  # past warmup rows
+        u_hist = np.array([(rho if basis == "rho" else ts)[k - j] for j in range(order + 1)])
+        lhs = float(np.sum(C[k] * p(u_hist)))
+        q_rho, q_w = _gauss_legendre(rho[k], rho[k + 1], 64)
+        q_u = q_rho if basis == "rho" else np.asarray(sde.t_of_rho(q_rho))
+        rhs = float(mu[k + 1] * np.sum(q_w * p(q_u)))
+        np.testing.assert_allclose(lhs, rhs, rtol=1e-7, atol=1e-10)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10 ** 6))
+def test_sampling_is_linear_in_state_for_linear_eps(seed):
+    """With eps linear in x, every deterministic DEIS update is affine: check
+    superposition x(a+b) - x(0) == (x(a)-x(0)) + (x(b)-x(0))."""
+    eps, _, _ = _gaussian_problem()
+    ts = get_timesteps(SDE, 8, "quadratic")
+    s = make_solver("tab2", SDE, ts)
+    key = jax.random.PRNGKey(seed)
+    a, b = jax.random.normal(key, (2, 1, 4))
+    f = lambda z: s.sample(eps, z)
+    zero = f(jnp.zeros((1, 4)))
+    lhs = f(a + b) - zero
+    rhs = (f(a) - zero) + (f(b) - zero)
+    np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs), rtol=1e-6, atol=1e-8)

@@ -1,0 +1,152 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else \
+        dict(rtol=2e-5, atol=2e-5)
+
+
+# ------------------------------------------------------------- deis_step
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("m,d,r", [(8, 16, 1), (300, 130, 3), (256, 128, 4),
+                                   (1, 1, 2), (1024, 256, 2)])
+def test_deis_step_matches_ref(m, d, r, dtype):
+    key = jax.random.PRNGKey(m * 7 + d + r)
+    ks = jax.random.split(key, 4)
+    x = jax.random.normal(ks[0], (m, d), dtype)
+    hist = jax.random.normal(ks[1], (r, m, d), dtype)
+    psi = jax.random.uniform(ks[2], (), jnp.float32, 0.5, 1.0)
+    coeffs = jax.random.normal(ks[3], (r,), jnp.float32)
+    got = ops.deis_step(x, hist, psi, coeffs, interpret=True)
+    want = ref.deis_step_ref(x, hist, psi, coeffs)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+@settings(max_examples=10, deadline=None)
+@given(m=st.integers(1, 400), d=st.integers(1, 300), r=st.integers(1, 4))
+def test_deis_step_property(m, d, r):
+    key = jax.random.PRNGKey(m * 31 + d * 7 + r)
+    ks = jax.random.split(key, 4)
+    x = jax.random.normal(ks[0], (m, d))
+    hist = jax.random.normal(ks[1], (r, m, d))
+    psi = jnp.float32(0.9)
+    coeffs = jax.random.normal(ks[3], (r,), jnp.float32)
+    got = ops.deis_step(x, hist, psi, coeffs, interpret=True)
+    want = ref.deis_step_ref(x, hist, psi, coeffs)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+# -------------------------------------------------------- flash attention
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,s,h,kv,d,causal,window", [
+    (2, 64, 4, 4, 32, True, 0),
+    (1, 128, 8, 2, 64, True, 0),     # GQA
+    (2, 96, 4, 1, 32, True, 0),      # MQA + padded seq (96 % 64)
+    (1, 64, 4, 4, 32, False, 0),     # bidirectional (diffusion mode)
+    (1, 128, 4, 2, 32, True, 32),    # sliding window
+])
+def test_flash_attention_matches_ref(b, s, h, kv, d, causal, window, dtype):
+    key = jax.random.PRNGKey(b + s + h + d)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, s, h, d), dtype)
+    k = jax.random.normal(ks[1], (b, s, kv, d), dtype)
+    v = jax.random.normal(ks[2], (b, s, kv, d), dtype)
+    got = ops.flash_attention(q, k, v, causal=causal, window=window,
+                              blk_q=32, blk_k=32, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+def test_flash_attention_block_shape_independence():
+    """Output must not depend on the BlockSpec tiling."""
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (1, 128, 2, 32))
+    k = jax.random.normal(ks[1], (1, 128, 2, 32))
+    v = jax.random.normal(ks[2], (1, 128, 2, 32))
+    a = ops.flash_attention(q, k, v, blk_q=128, blk_k=128, interpret=True)
+    b = ops.flash_attention(q, k, v, blk_q=32, blk_k=64, interpret=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-6)
+
+
+# --------------------------------------------------------------- ssd_scan
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,s,h,p,n,chunk", [
+    (2, 64, 2, 16, 8, 16),
+    (1, 96, 3, 8, 16, 32),    # padded chunks (96 % 32 == 0; heads odd)
+    (1, 50, 2, 16, 8, 16),    # seq not a chunk multiple
+    (2, 32, 1, 32, 32, 32),   # single chunk
+])
+def test_ssd_scan_matches_naive_recurrence(b, s, h, p, n, chunk, dtype):
+    key = jax.random.PRNGKey(s + h + p)
+    ks = jax.random.split(key, 4)
+    x = jax.random.normal(ks[0], (b, s, h, p), dtype)
+    a = jax.random.uniform(ks[1], (b, s, h), jnp.float32, 0.7, 0.999)
+    B = jax.random.normal(ks[2], (b, s, n), dtype)
+    C = jax.random.normal(ks[3], (b, s, n), dtype)
+    y, st_ = ops.ssd_scan(x, a, B, C, chunk=chunk, interpret=True)
+    y_ref, st_ref = ref.ssd_scan_ref(x, a, B, C)
+    tol = dict(rtol=5e-2, atol=5e-2) if dtype == jnp.bfloat16 else \
+        dict(rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(y_ref, np.float32), **tol)
+    np.testing.assert_allclose(np.asarray(st_), np.asarray(st_ref), **tol)
+
+
+def test_ssd_chunked_xla_matches_naive():
+    """The XLA-path chunked SSD (models/ssm.py) against the recurrence."""
+    from repro.models.ssm import ssd_chunked
+    key = jax.random.PRNGKey(3)
+    ks = jax.random.split(key, 4)
+    b, s, h, p, n = 2, 64, 2, 16, 8
+    x = jax.random.normal(ks[0], (b, s, h, p))
+    a = jax.random.uniform(ks[1], (b, s, h), jnp.float32, 0.7, 0.999)
+    B = jax.random.normal(ks[2], (b, s, n))
+    C = jax.random.normal(ks[3], (b, s, n))
+    y, st_ = ssd_chunked(x, a, B, C, chunk=16)
+    y_ref, st_ref = ref.ssd_scan_ref(x, a, B, C)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(st_), np.asarray(st_ref), rtol=2e-4, atol=2e-4)
+
+
+def test_ssd_kernel_matches_xla_chunked():
+    from repro.models.ssm import ssd_chunked
+    key = jax.random.PRNGKey(4)
+    ks = jax.random.split(key, 4)
+    b, s, h, p, n = 1, 128, 2, 16, 8
+    x = jax.random.normal(ks[0], (b, s, h, p))
+    a = jax.random.uniform(ks[1], (b, s, h), jnp.float32, 0.8, 0.999)
+    B = jax.random.normal(ks[2], (b, s, n))
+    C = jax.random.normal(ks[3], (b, s, n))
+    y1, s1 = ops.ssd_scan(x, a, B, C, chunk=32, interpret=True)
+    y2, s2 = ssd_chunked(x, a, B, C, chunk=32)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=2e-4, atol=2e-4)
+
+
+def test_fused_absolver_matches_unfused():
+    """ABSolver(fused_update=True) routes Eq. 14 through the Pallas kernel
+    and must be numerically identical to the jnp path."""
+    from repro.core import VPSDE, get_timesteps
+    from repro.core.solvers import ABSolver
+    from repro.diffusion.analytic import GaussianData
+    sde = VPSDE()
+    d = 8
+    g = GaussianData(sde, mean=np.full(d, 1.0), var=np.full(d, 0.3))
+    eps = g.eps_fn()
+    xT = jax.random.normal(jax.random.PRNGKey(0), (16, d)) * sde.prior_std()
+    ts = get_timesteps(sde, 8, "quadratic")
+    a = ABSolver(sde, ts, order=3).sample(eps, xT)
+    b = ABSolver(sde, ts, order=3, fused_update=True).sample(eps, xT)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5,
+                               atol=1e-5)

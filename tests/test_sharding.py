@@ -1,0 +1,135 @@
+"""Sharding rules: divisibility fallbacks, spec validity, and a real
+multi-device pjit run on a small host mesh (8 fake CPU devices via conftest?
+-- no: tests must see 1 device per the assignment, so these tests validate
+SPECS structurally and run pjit on a 1x1 mesh; the 512-device path is covered
+by the dry-run)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs.base import ARCH_IDS, get_config
+from repro.models import transformer as T
+from repro.sharding import rules as R
+
+
+class FakeMesh:
+    """Structural stand-in with arbitrary axis sizes (no devices needed)."""
+
+    def __init__(self, **axes):
+        self.shape = dict(axes)
+        self.axis_names = tuple(axes)
+
+
+MESH = FakeMesh(data=16, model=16)
+MESH_POD = FakeMesh(pod=2, data=16, model=16)
+
+
+def _params_shape(arch, objective="ar"):
+    cfg = get_config(arch).with_(objective=objective)
+    return cfg, jax.eval_shape(lambda k: T.init_params(cfg, k),
+                               jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+
+@pytest.mark.parametrize("arch", [a for a in ARCH_IDS if a != "cifar10_scorenet"])
+@pytest.mark.parametrize("mesh", [MESH, MESH_POD], ids=["pod1", "pod2"])
+@pytest.mark.parametrize("fsdp", [False, True])
+def test_param_specs_divisible(arch, mesh, fsdp):
+    """Every assigned axis must divide evenly -- the engine's core contract."""
+    cfg, shape = _params_shape(arch)
+    specs = R.param_specs(shape, mesh, fsdp=fsdp)
+
+    def check(leaf, spec):
+        for dim, axis in enumerate(spec):
+            if axis is None:
+                continue
+            axes = axis if isinstance(axis, tuple) else (axis,)
+            size = int(np.prod([mesh.shape[a] for a in axes]))
+            assert leaf.shape[dim] % size == 0, (arch, leaf.shape, spec)
+
+    jax.tree.map(check, shape, specs, is_leaf=lambda x: isinstance(x, P))
+    # tree structures match
+    assert jax.tree.structure(shape) == jax.tree.structure(
+        specs, is_leaf=lambda x: isinstance(x, P))
+
+
+def test_whisper_heads_replicate_but_dff_shards():
+    """whisper-tiny: q_dim=384 shards on 16 (24/shard); d_ff=1536 shards."""
+    cfg, shape = _params_shape("whisper_tiny")
+    specs = R.param_specs(shape, MESH, fsdp=False)
+    wq_spec = specs["blocks"]["slot0"]["attn"]["wq"]
+    assert wq_spec[-1] == "model"          # 384 % 16 == 0
+    mlp_spec = specs["blocks"]["slot0"]["mlp"]["w_up"]
+    assert mlp_spec[-1] == "model"
+
+
+def test_odd_vocab_replicates_embed_rows():
+    """whisper vocab 51865 is not divisible by 16 -> embed dim0 replicated."""
+    cfg, shape = _params_shape("whisper_tiny")
+    specs = R.param_specs(shape, MESH, fsdp=False)
+    assert specs["embed"][0] is None
+    # granite vocab 49155 also odd
+    cfg2, shape2 = _params_shape("granite_3_8b")
+    specs2 = R.param_specs(shape2, MESH, fsdp=False)
+    assert specs2["embed"][0] is None
+    # gemma 256000 divides
+    cfg3, shape3 = _params_shape("gemma_2b")
+    specs3 = R.param_specs(shape3, MESH, fsdp=False)
+    assert specs3["embed"][0] == "model"
+
+
+def test_fsdp_adds_data_axis_on_big_weights():
+    cfg, shape = _params_shape("grok_1_314b")
+    specs = R.param_specs(shape, MESH, fsdp=True)
+    moe_up = specs["blocks"]["slot0"]["moe"]["w_up"]
+    assert moe_up[-1] == "model" and moe_up[-2] == "data"
+
+
+def test_batch_specs():
+    mesh = MESH_POD
+    batch = {"tokens": jax.ShapeDtypeStruct((256, 4096), jnp.int32)}
+    specs = R.batch_specs(batch, mesh)
+    assert specs["tokens"] == P(("pod", "data"), None)
+    # batch=1 cannot shard over 32 -> replicated
+    batch2 = {"tokens": jax.ShapeDtypeStruct((1, 64), jnp.int32)}
+    assert R.batch_specs(batch2, mesh)["tokens"] == P(None, None)
+
+
+@pytest.mark.parametrize("arch", ["glm4_9b", "mamba2_2p7b", "jamba_1p5_large",
+                                  "h2o_danube_3_4b"])
+def test_cache_specs_divisible(arch):
+    cfg = get_config(arch).with_(objective="ar")
+    cache_shape = jax.eval_shape(lambda: T.init_cache(cfg, 128, 32768, jnp.bfloat16))
+    specs = R.cache_specs(cache_shape, MESH)
+
+    def check(leaf, spec):
+        for dim, axis in enumerate(spec):
+            if axis is None:
+                continue
+            axes = axis if isinstance(axis, tuple) else (axis,)
+            size = int(np.prod([MESH.shape[a] for a in axes]))
+            assert leaf.shape[dim] % size == 0, (arch, leaf.shape, spec)
+
+    jax.tree.map(check, cache_shape, specs, is_leaf=lambda x: isinstance(x, P))
+
+
+def test_pjit_runs_on_host_mesh():
+    """End-to-end pjit with the rules engine on the single host device."""
+    from repro.launch.mesh import make_host_mesh
+    from repro.training.optimizer import AdamW, constant_schedule
+    from repro.training.steps import make_train_step
+    cfg = get_config("gemma_2b").reduced().with_(objective="ar")
+    mesh = make_host_mesh()
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    pspec = R.param_specs(jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype), params), mesh)
+    psh = R.to_shardings(pspec, mesh)
+    opt = AdamW(constant_schedule(1e-3))
+    opt_state = opt.init(params)
+    step = jax.jit(make_train_step(cfg, opt), in_shardings=(psh, None, None, None))
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (4, 32), 0,
+                                          cfg.vocab_size)}
+    with mesh:
+        p2, o2, m = step(params, opt_state, batch, jax.random.PRNGKey(2))
+    assert np.isfinite(float(m["loss"]))
