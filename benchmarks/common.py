@@ -8,7 +8,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import VPSDE, VESDE, get_timesteps, make_solver
+from repro.core import VPSDE, VESDE, get_timesteps, make_plan, sample
 from repro.diffusion.analytic import GMMData, default_gmm
 from repro.diffusion.score_net import train_score_net, TrainedScoreModel
 
@@ -21,8 +21,8 @@ def gmm_problem(d: int = 2):
     gmm = default_gmm(SDE, d=d)
     eps = gmm.eps_fn()
     x_T = jax.random.normal(jax.random.PRNGKey(0), (512, d)) * SDE.prior_std()
-    ref = make_solver("rho_rk4", SDE,
-                      get_timesteps(SDE, 500, "log_rho")).sample(eps, x_T)
+    ref = sample(make_plan("rho_rk4", SDE, get_timesteps(SDE, 500, "log_rho")),
+                 eps, x_T)
     return gmm, eps, x_T, ref
 
 
@@ -34,8 +34,8 @@ def trained_problem(d: int = 2, steps: int = 1500):
                             steps=steps, seed=0)
     eps = model.eps_fn()
     x_T = jax.random.normal(jax.random.PRNGKey(0), (512, d)) * SDE.prior_std()
-    ref = make_solver("rho_rk4", SDE,
-                      get_timesteps(SDE, 500, "log_rho")).sample(eps, x_T)
+    ref = sample(make_plan("rho_rk4", SDE, get_timesteps(SDE, 500, "log_rho")),
+                 eps, x_T)
     return gmm, eps, x_T, ref
 
 
@@ -59,8 +59,9 @@ def sliced_w2(x, y, n_proj: int = 128, seed: int = 0) -> float:
 
 def solve(eps, x_T, solver_name: str, nfe_grid: int, schedule: str = "quadratic",
           t0=None, key=None, **kw):
-    s = make_solver(solver_name, SDE, get_timesteps(SDE, nfe_grid, schedule, t0=t0), **kw)
-    return s.sample(eps, x_T, key), s.nfe
+    plan = make_plan(solver_name, SDE,
+                     get_timesteps(SDE, nfe_grid, schedule, t0=t0), **kw)
+    return sample(plan, eps, x_T, key), plan.nfe
 
 
 def timed(fn, *args, reps: int = 3):

@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import VPSDE, get_timesteps, make_solver
+from repro.core import VPSDE, get_timesteps, make_plan, sample
 from repro.diffusion.analytic import GaussianData
 
 from .common import SDE, rmse_to_ref
@@ -22,8 +22,8 @@ def run(quick: bool = False):
         row = {"table": "fig3", "N": n}
         for name, label in [("naive_ei", "EI_s_param"), ("euler", "Euler"),
                             ("ddim", "EI_eps_param")]:
-            s = make_solver(name, SDE, get_timesteps(SDE, n, "uniform"))
-            row[label] = round(rmse_to_ref(s.sample(eps, xT), exact), 6)
+            plan = make_plan(name, SDE, get_timesteps(SDE, n, "uniform"))
+            row[label] = round(rmse_to_ref(sample(plan, eps, xT), exact), 6)
         row["claim_ok"] = bool(row["EI_s_param"] > row["Euler"] > row["EI_eps_param"])
         rows.append(row)
     return rows

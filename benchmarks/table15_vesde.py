@@ -3,7 +3,7 @@
 import jax
 import numpy as np
 
-from repro.core import VESDE, get_timesteps, make_solver
+from repro.core import VESDE, get_timesteps, make_plan, sample
 from repro.diffusion.analytic import default_gmm
 
 from .common import rmse_to_ref
@@ -14,14 +14,14 @@ def run(quick: bool = False):
     gmm = default_gmm(sde, d=2)
     eps = gmm.eps_fn()
     xT = jax.random.normal(jax.random.PRNGKey(0), (512, 2)) * sde.prior_std()
-    ref = make_solver("rho_rk4", sde,
-                      get_timesteps(sde, 400, "log_rho")).sample(eps, xT)
+    ref = sample(make_plan("rho_rk4", sde, get_timesteps(sde, 400, "log_rho")),
+                 eps, xT)
     rows = []
     for n in ([10, 20] if quick else [5, 10, 20, 50]):
         row = {"table": "table15_vesde", "NFE": n}
         for r in range(4):
             name = "ddim" if r == 0 else f"tab{r}"
-            s = make_solver(name, sde, get_timesteps(sde, n, "log_rho"))
-            row[f"tAB{r}"] = round(rmse_to_ref(s.sample(eps, xT), ref), 6)
+            plan = make_plan(name, sde, get_timesteps(sde, n, "log_rho"))
+            row[f"tAB{r}"] = round(rmse_to_ref(sample(plan, eps, xT), ref), 6)
         rows.append(row)
     return rows

@@ -1,5 +1,5 @@
 """Paper Tabs. 6-8: t0 x time-scheduling study (Eqs. 42-44)."""
-from repro.core import get_timesteps, make_solver
+from repro.core import get_timesteps, make_plan, sample
 
 from .common import SDE, trained_problem, rmse_to_ref
 
@@ -20,7 +20,7 @@ def run(quick: bool = False):
                 row = {"table": "table6_8", "NFE_grid": n, "t0": t0,
                        "schedule": f"{sched}{kw.get('kappa','')}"}
                 for name in solvers:
-                    s = make_solver(name, SDE, ts)
-                    row[name] = round(rmse_to_ref(s.sample(eps, xT), ref), 6)
+                    plan = make_plan(name, SDE, ts)
+                    row[name] = round(rmse_to_ref(sample(plan, eps, xT), ref), 6)
                 rows.append(row)
     return rows

@@ -12,7 +12,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import VPSDE, get_timesteps, make_solver
+from repro.core import VPSDE, get_timesteps, make_plan, sample
 from repro.diffusion.score_net import train_score_net
 
 H = W = 8
@@ -52,21 +52,21 @@ def main():
     eps = model.eps_fn()
 
     x_T = jax.random.normal(jax.random.PRNGKey(0), (256, D)) * sde.prior_std()
-    ref = make_solver("rho_rk4", sde,
-                      get_timesteps(sde, 300, "log_rho")).sample(eps, x_T)
+    ref = sample(make_plan("rho_rk4", sde, get_timesteps(sde, 300, "log_rho")),
+                 eps, x_T)
     print(f"\n{'solver':10s}" + "".join(f"  NFE={n:<4d}" for n in (5, 10, 20)))
     best = {}
     for name in ("ddim", "tab2", "tab3", "ipndm3"):
         errs = []
         for n in (5, 10, 20):
-            s = make_solver(name, sde, get_timesteps(sde, n, "quadratic"))
-            x = s.sample(eps, x_T)
+            plan = make_plan(name, sde, get_timesteps(sde, n, "quadratic"))
+            x = sample(plan, eps, x_T)
             errs.append(float(jnp.sqrt(jnp.mean((x - ref) ** 2))))
         best[name] = errs[1]
         print(f"{name:10s}" + "".join(f"  {e:8.4f}" for e in errs))
 
-    s10 = make_solver("tab3", sde, get_timesteps(sde, 10, "quadratic"))
-    samples = s10.sample(eps, x_T[:4])
+    p10 = make_plan("tab3", sde, get_timesteps(sde, 10, "quadratic"))
+    samples = sample(p10, eps, x_T[:4])
     print("\ntAB3 @ 10 NFE samples:")
     for i in range(2):
         print(render(samples[i]), "\n")

@@ -12,7 +12,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import VPSDE, get_timesteps, make_solver
+from repro.core import VPSDE, get_timesteps, make_plan, sample
 from repro.diffusion.analytic import default_gmm
 from repro.diffusion.score_net import train_score_net
 
@@ -30,23 +30,23 @@ def main():
     eps = model.eps_fn()
 
     x_T = jax.random.normal(jax.random.PRNGKey(0), (1024, 2)) * sde.prior_std()
-    ref = make_solver("rho_rk4", sde,
-                      get_timesteps(sde, 400, "log_rho")).sample(eps, x_T)
+    ref = sample(make_plan("rho_rk4", sde, get_timesteps(sde, 400, "log_rho")),
+                 eps, x_T)
 
     print(f"\n{'solver':12s}" + "".join(f"  NFE={n:<4d}" for n in (5, 10, 20, 50)))
     for name in ("ddim", "tab1", "tab2", "tab3", "rho_heun", "ipndm3"):
         errs = []
         for n in (5, 10, 20, 50):
-            s = make_solver(name, sde, get_timesteps(sde, n, "quadratic"))
-            x = s.sample(eps, x_T)
+            plan = make_plan(name, sde, get_timesteps(sde, n, "quadratic"))
+            x = sample(plan, eps, x_T)
             errs.append(float(jnp.sqrt(jnp.mean((x - ref) ** 2))))
         print(f"{name:12s}" + "".join(f"  {e:8.4f}" for e in errs))
 
     # headline check (paper Tab. 2: high-order DEIS >> DDIM at equal low NFE)
-    s_deis = make_solver("tab3", sde, get_timesteps(sde, 10, "quadratic"))
-    s_ddim = make_solver("ddim", sde, get_timesteps(sde, 10, "quadratic"))
-    e_deis = float(jnp.sqrt(jnp.mean((s_deis.sample(eps, x_T) - ref) ** 2)))
-    e_ddim = float(jnp.sqrt(jnp.mean((s_ddim.sample(eps, x_T) - ref) ** 2)))
+    p_deis = make_plan("tab3", sde, get_timesteps(sde, 10, "quadratic"))
+    p_ddim = make_plan("ddim", sde, get_timesteps(sde, 10, "quadratic"))
+    e_deis = float(jnp.sqrt(jnp.mean((sample(p_deis, eps, x_T) - ref) ** 2)))
+    e_ddim = float(jnp.sqrt(jnp.mean((sample(p_ddim, eps, x_T) - ref) ** 2)))
     print(f"\n@10 NFE: tAB3 err={e_deis:.4f} vs DDIM err={e_ddim:.4f} -> "
           f"{'DEIS wins at equal NFE' if e_deis < e_ddim else 'check training'}")
     return 0 if e_deis < e_ddim else 1

@@ -13,7 +13,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import get_config
-from repro.core import VPSDE, get_timesteps, make_solver
+from repro.core import VPSDE, get_timesteps, make_plan
 from repro.data.pipeline import MarkovTextSource, make_batch
 from repro.diffusion import lm as DLM
 from repro.models import transformer as T
@@ -62,14 +62,15 @@ def main():
         np.random.randint(0, cfg.vocab_size, (64, args.seq)), cfg.vocab_size)
     print(f"\nbigram-band score: data={data_score:.3f} random={rand_score:.3f}")
     for solver, nfe in (("ddim", 10), ("tab2", 10), ("tab3", 10)):
-        sol = make_solver(solver, sde, get_timesteps(sde, nfe, "quadratic"))
+        plan = make_plan(solver, sde, get_timesteps(sde, nfe, "quadratic"))
         kw = {}
         if cfg.arch_type == "vlm":
             kw["prefix"] = jnp.zeros((8, cfg.prefix_tokens, cfg.d_model))
         if cfg.arch_type == "encdec":
             kw["frames"] = jnp.zeros((8, cfg.encoder_seq, cfg.d_model))
-        toks, _ = DLM.sample_tokens(params, cfg, sol, jax.random.PRNGKey(9),
-                                    batch=8, seq_len=args.seq, **kw)
+        toks, _ = DLM.sample_tokens(params, cfg, plan, jax.random.PRNGKey(9),
+                                    batch=8, seq_len=args.seq,
+                                    prior_std=sde.prior_std(), **kw)
         print(f"{solver:6s}@{nfe}NFE: gen bigram-band score = "
               f"{bigram_band_score(toks, cfg.vocab_size):.3f}")
     return 0

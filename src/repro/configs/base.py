@@ -1,16 +1,18 @@
-"""Config system: dataclasses + dict/CLI overrides (dacite-backed).
+"""Config system: dataclasses + dict/CLI overrides.
 
 One ``ModelConfig`` describes any backbone in the zoo (dense / MoE / SSM /
 hybrid / encoder-decoder / VLM). Architecture configs under ``repro/configs``
 instantiate the exact assigned settings and cite their source.
+
+Dict -> dataclass conversion is handled by a small local strict converter
+(``config_from_dict``) so the package has no dependency beyond jax/numpy.
 """
 from __future__ import annotations
 
 import dataclasses
 import importlib
+import typing
 from typing import Any, Optional
-
-import dacite
 
 
 @dataclasses.dataclass(frozen=True)
@@ -168,5 +170,41 @@ def get_config(arch: str, **overrides) -> ModelConfig:
     return cfg
 
 
+def _strict_from_dict(cls, data: dict):
+    """Strict dict -> dataclass: unknown keys raise, nested dataclasses recurse,
+    lists destined for tuple fields are converted, obvious type mismatches raise."""
+    if not isinstance(data, dict):
+        raise TypeError(f"expected dict for {cls.__name__}, got {type(data).__name__}")
+    fields = {f.name: f for f in dataclasses.fields(cls)}
+    unknown = set(data) - set(fields)
+    if unknown:
+        raise ValueError(f"unknown keys {sorted(unknown)} for {cls.__name__}")
+    hints = typing.get_type_hints(cls)
+    kwargs: dict[str, Any] = {}
+    for name, val in data.items():
+        tp = hints[name]
+        if typing.get_origin(tp) is typing.Union:  # Optional[X]
+            non_none = [a for a in typing.get_args(tp) if a is not type(None)]
+            if val is None:
+                kwargs[name] = None
+                continue
+            tp = non_none[0]
+        if dataclasses.is_dataclass(tp):
+            kwargs[name] = _strict_from_dict(tp, val)
+        elif tp is tuple or typing.get_origin(tp) is tuple:
+            if not isinstance(val, (list, tuple)):
+                raise TypeError(f"{cls.__name__}.{name}: expected list/tuple, "
+                                f"got {type(val).__name__}")
+            kwargs[name] = tuple(val)
+        elif tp is float and isinstance(val, (int, float)) and not isinstance(val, bool):
+            kwargs[name] = float(val)
+        elif isinstance(tp, type) and not isinstance(val, tp):
+            raise TypeError(f"{cls.__name__}.{name}: expected {tp.__name__}, "
+                            f"got {type(val).__name__}")
+        else:
+            kwargs[name] = val
+    return cls(**kwargs)
+
+
 def config_from_dict(d: dict) -> ModelConfig:
-    return dacite.from_dict(ModelConfig, d, config=dacite.Config(strict=True))
+    return _strict_from_dict(ModelConfig, d)

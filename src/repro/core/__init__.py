@@ -1,16 +1,46 @@
-"""DEIS core: the paper's contribution as a composable JAX module."""
+"""DEIS core: the paper's contribution as a composable JAX module.
+
+The public sampling API is functional: a pure *plan builder* precomputes the
+per-step exponential-integrator coefficients into an immutable
+:class:`SolverPlan` pytree, and a single *executor* applies any plan:
+
+    from repro.core import VPSDE, get_timesteps, make_plan, sample
+
+    sde = VPSDE()
+    plan = make_plan("tab3", sde, get_timesteps(sde, 10, "quadratic"))
+    x0 = sample(plan, eps_fn, x_T)                   # full solve
+    # -- or stream it step by step (serving / resumable solves):
+    from repro.core import init_state, step
+    st = init_state(plan, x_T)
+    for k in range(plan.n_steps):
+        st = step(plan, k, st, eps_fn)
+
+Plans are jit/vmap/pjit-traced arguments: every plan with the same
+``signature`` (method tag + coefficient shapes) shares one compiled
+executor. The class-based API (``make_solver``, ``ABSolver`` ...) remains as
+thin deprecation shims over plans; see ``repro/core/solvers.py`` for the
+migration map.
+"""
 from .sde import SDE, VPSDE, VESDE, SubVPSDE, get_sde
 from .schedules import get_timesteps, SCHEDULES
 from .coeffs import ab_coefficients, ddim_coefficients_vp, naive_ei_coefficients, AB_WEIGHTS
-from .solvers import (ABSolver, RKSolver, EulerSolver, EMSolver, DDIMSolver,
-                      IPNDMSolver, PNDMSolver, make_solver, SOLVER_NAMES, SolverBase)
+from .plan import (SolverPlan, make_plan, plan_ab, plan_rk, plan_ddim,
+                   plan_euler, plan_em, plan_ipndm, plan_pndm)
+from .sampler import Hooks, SamplerState, init_state, sample, step
+from .solvers import (ABSolver, RKSolver, DPMSolver2, EulerSolver, EMSolver,
+                      DDIMSolver, IPNDMSolver, PNDMSolver, make_solver,
+                      SOLVER_NAMES, SolverBase)
 from .likelihood import nll_bits_per_dim
 
 __all__ = [
     "SDE", "VPSDE", "VESDE", "SubVPSDE", "get_sde",
     "get_timesteps", "SCHEDULES",
     "ab_coefficients", "ddim_coefficients_vp", "naive_ei_coefficients", "AB_WEIGHTS",
-    "ABSolver", "RKSolver", "EulerSolver", "EMSolver", "DDIMSolver",
-    "IPNDMSolver", "PNDMSolver", "make_solver", "SOLVER_NAMES", "SolverBase",
+    "SolverPlan", "make_plan", "plan_ab", "plan_rk", "plan_ddim",
+    "plan_euler", "plan_em", "plan_ipndm", "plan_pndm",
+    "Hooks", "SamplerState", "init_state", "sample", "step",
+    "ABSolver", "RKSolver", "DPMSolver2", "EulerSolver", "EMSolver",
+    "DDIMSolver", "IPNDMSolver", "PNDMSolver", "make_solver", "SOLVER_NAMES",
+    "SolverBase",
     "nll_bits_per_dim",
 ]

@@ -20,16 +20,25 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .sampler import SamplerState
 from .sde import SDE
 from .solvers import SolverBase, _f64
 
 
 @dataclasses.dataclass
 class AdaptiveResult:
-    x0: jax.Array
+    """Adaptive solve outcome, unified on the executor's ``SamplerState``:
+    ``state.x`` is the final iterate and ``state.k`` the accepted-step count,
+    so downstream code treats fixed-grid and adaptive results uniformly."""
+
+    state: SamplerState
     nfe: int          # total evals including rejected steps
     n_accepted: int
     n_rejected: int
+
+    @property
+    def x0(self) -> jax.Array:
+        return self.state.x
 
 
 class AdaptiveRK23(SolverBase):
@@ -83,6 +92,9 @@ class AdaptiveRK23(SolverBase):
                 n_acc += 1
             else:
                 n_rej += 1
-            h = h * float(np.clip(0.9 * err ** (-1 / 3), 0.2, 5.0))
+            # err == 0 (exactly integrable eps, e.g. affine): take the max growth
+            h = h * float(np.clip(0.9 * max(err, 1e-12) ** (-1 / 3), 0.2, 5.0))
         x0 = float(self.sde.mu(self.sde.t0)) * y
-        return AdaptiveResult(x0, nfe, n_acc, n_rej)
+        state = SamplerState(x=x0, hist=jnp.zeros((0,) + x0.shape, x0.dtype),
+                             key=jax.random.PRNGKey(0), k=jnp.int32(n_acc))
+        return AdaptiveResult(state, nfe, n_acc, n_rej)

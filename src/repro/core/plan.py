@@ -1,0 +1,292 @@
+r"""SolverPlan: immutable per-step coefficient pytrees for every DEIS-family
+solver (paper Secs. 3-4, App. H.2).
+
+The paper's whole solver family shares one semilinear structure: coefficients
+are precomputed once on the host (float64 numpy) and then applied in a fixed
+loop of cheap affine updates around the eps-network calls. A ``SolverPlan``
+captures exactly that split:
+
+  * dynamic leaves (jit/vmap/pjit-traced): ``ts`` and a ``coeffs`` dict of
+    per-step arrays, and
+  * static metadata (part of the pytree treedef, hence the jit cache key):
+    the step ``method`` tag, ``stochastic``/``fused`` flags and the NFE count.
+
+Three step methods cover all twenty ``SOLVER_NAMES``:
+
+  ``ab``    x' = psi[k] x + C[k] @ eps_hist (+ s[k] xi for stochastic plans).
+            Covers tAB/rhoAB-DEIS (any order), deterministic & stochastic
+            DDIM, naive EI, Euler on the x-space PF-ODE (psi = 1 + dt f), and
+            Euler-Maruyama on the lambda-SDE -- they are all affine in
+            (x, eps history, noise) once coefficients are precomputed.
+            iPNDM folds its uniform-grid AB weights into C (C[k,j] =
+            C0[k] * W[k,j]) and lands here too.
+  ``rk``    rhoRK-DEIS on dy/drho = eps_hat (Prop. 3) with a *per-step*
+            Butcher tableau A[k]; DPM-Solver-2's geometric-mean stage is just
+            a per-step a21, so it needs no special case.
+  ``pndm``  original PNDM: 3 pseudo-RK4 warmup steps (precomputed DDIM
+            transfer ratios) + AB4 tail folded into C like iPNDM.
+
+Plans are consumed by :mod:`repro.core.sampler` (``sample`` / ``step``).
+Builders (``plan_ab``, ``plan_rk``, ``plan_ddim``, ``plan_euler``,
+``plan_em``, ``plan_ipndm``, ``plan_pndm``) subsume the precompute that used
+to live in the solver-class ``__init__``s; ``make_plan`` is the name-based
+factory mirroring ``make_solver``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import coeffs as C
+from .sde import SDE, VPSDE
+
+
+def _f64(x):
+    return np.asarray(x, dtype=np.float64)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class SolverPlan:
+    """Immutable pytree of precomputed per-step solver coefficients.
+
+    ``coeffs``/``ts`` are dynamic leaves; ``method``, ``stochastic``,
+    ``fused`` and ``nfe`` are static (they select the executor trace).
+    Two plans with equal :meth:`signature` share one jitted executor.
+    """
+
+    coeffs: dict = dataclasses.field(metadata=dict(static=False))
+    ts: jax.Array = dataclasses.field(metadata=dict(static=False))
+    method: str = dataclasses.field(metadata=dict(static=True))
+    stochastic: bool = dataclasses.field(default=False, metadata=dict(static=True))
+    fused: bool = dataclasses.field(default=False, metadata=dict(static=True))
+    nfe: int = dataclasses.field(default=0, metadata=dict(static=True))
+
+    @property
+    def n_steps(self) -> int:
+        return self.ts.shape[0] - 1
+
+    @property
+    def history_len(self) -> int:
+        """Rows of eps history carried in ``SamplerState.hist``."""
+        if self.method == "ab":
+            return self.coeffs["C"].shape[1]
+        if self.method == "pndm":
+            return 4
+        return 0  # rk: stage evals live inside one step
+
+    @property
+    def signature(self) -> tuple:
+        """Trace identity: plans with equal signatures (and equal batch/shape
+        of the sampled state) reuse one compiled executor."""
+        leaves = tuple(sorted((k, tuple(v.shape), str(v.dtype))
+                              for k, v in self.coeffs.items()))
+        return (self.method, self.stochastic, self.fused,
+                tuple(self.ts.shape), leaves)
+
+    def astype(self, dtype) -> "SolverPlan":
+        dtype = jnp.dtype(dtype)
+        needs = lambda a: jnp.issubdtype(a.dtype, jnp.floating) and a.dtype != dtype
+        if not needs(self.ts) and not any(needs(v) for v in self.coeffs.values()):
+            return self  # fast path: step() calls this every step
+        cast = lambda a: a.astype(dtype) if jnp.issubdtype(a.dtype, jnp.floating) else a
+        return dataclasses.replace(
+            self, coeffs={k: cast(v) for k, v in self.coeffs.items()},
+            ts=cast(self.ts))
+
+
+def _mk(method: str, coeffs: dict, ts: np.ndarray, *, stochastic=False,
+        fused=False, nfe: int) -> SolverPlan:
+    coeffs = {k: jnp.asarray(v) for k, v in coeffs.items()}
+    return SolverPlan(coeffs=coeffs, ts=jnp.asarray(_f64(ts)), method=method,
+                      stochastic=stochastic, fused=fused, nfe=nfe)
+
+
+# --------------------------------------------------------------------- AB
+def plan_ab(sde: SDE, ts, order: int = 0, basis: str = "t",
+            naive_ei: bool = False, fused: bool = False) -> SolverPlan:
+    """tAB/rhoAB-DEIS (Eq. 14); r=0 == deterministic DDIM (Prop. 2).
+
+    ``fused`` routes the multistep combination through the Pallas
+    ``deis_step`` kernel (one HBM round-trip instead of r+2).
+    """
+    ts = _f64(ts)
+    if naive_ei:
+        if order != 0:
+            raise ValueError("naive EI is zero-order only")
+        psi, Cm = C.naive_ei_coefficients(sde, ts)
+    else:
+        psi, Cm = C.ab_coefficients(sde, ts, order, basis)
+    return _mk("ab", {"psi": psi, "C": Cm}, ts, fused=fused, nfe=len(ts) - 1)
+
+
+def plan_ddim(sde: VPSDE, ts, eta: float = 0.0) -> SolverPlan:
+    """Stochastic DDIM(eta) for VPSDE (Prop. 4, Eq. 34); eta=0 is the
+    deterministic DDIM and produces a deterministic plan."""
+    if not isinstance(sde, VPSDE):
+        raise TypeError("stochastic DDIM is defined for VPSDE")
+    ts = _f64(ts)
+    ab = _f64(sde.alpha_bar(ts))
+    sig2 = (eta ** 2) * (1 - ab[1:]) / (1 - ab[:-1]) * (1 - ab[:-1] / ab[1:])
+    sig2 = np.maximum(sig2, 0.0)
+    a = np.sqrt(ab[1:] / ab[:-1])
+    # x' = a x + b eps + s xi,  b = sqrt(1-ab'-sig2) - a sqrt(1-ab)
+    b = np.sqrt(np.maximum(1 - ab[1:] - sig2, 0.0)) - a * np.sqrt(1 - ab[:-1])
+    coeffs = {"psi": a, "C": b[:, None]}
+    if eta > 0:
+        coeffs["s"] = np.sqrt(sig2)
+    return _mk("ab", coeffs, ts, stochastic=eta > 0, nfe=len(ts) - 1)
+
+
+def plan_euler(sde: SDE, ts) -> SolverPlan:
+    """Explicit Euler on the x-space PF-ODE (Eq. 7), folded to affine form:
+    x' = (1 + dt f) x + (dt * g^2 / (2 sigma)) eps."""
+    ts = _f64(ts)
+    dt = ts[1:] - ts[:-1]
+    psi = 1.0 + dt * _f64(sde.f(ts[:-1]))
+    Cm = (dt * 0.5 * _f64(sde.g2(ts[:-1])) / _f64(sde.sigma(ts[:-1])))[:, None]
+    return _mk("ab", {"psi": psi, "C": Cm}, ts, nfe=len(ts) - 1)
+
+
+def plan_em(sde: SDE, ts, lam: float = 1.0) -> SolverPlan:
+    """Euler-Maruyama on the lambda-SDE (Eq. 4); lambda=1 = reverse diffusion.
+    Affine form with per-step noise scale s = lam g sqrt(-dt)."""
+    ts = _f64(ts)
+    dt = ts[1:] - ts[:-1]
+    psi = 1.0 + dt * _f64(sde.f(ts[:-1]))
+    coef = 0.5 * (1 + lam ** 2) * _f64(sde.g2(ts[:-1])) / _f64(sde.sigma(ts[:-1]))
+    s = lam * np.sqrt(_f64(sde.g2(ts[:-1]))) * np.sqrt(-dt)
+    return _mk("ab", {"psi": psi, "C": (dt * coef)[:, None], "s": s}, ts,
+               stochastic=True, nfe=len(ts) - 1)
+
+
+def plan_ipndm(sde: SDE, ts, order: int = 3) -> SolverPlan:
+    """Improved PNDM (App. H.2, Algo 4): classical uniform-grid AB weights
+    with lower-order warmup, folded into the AB coefficient matrix."""
+    ts = _f64(ts)
+    psi, C0 = C.ab_coefficients(sde, ts, 0, "t")
+    n = len(ts) - 1
+    Cm = np.zeros((n, order + 1))
+    for k in range(n):
+        r_eff = min(order, k)
+        Cm[k, : r_eff + 1] = C0[k, 0] * C.AB_WEIGHTS[r_eff]
+    return _mk("ab", {"psi": psi, "C": Cm}, ts, nfe=n)
+
+
+# --------------------------------------------------------------------- RK
+_TABLEAUS = {
+    "heun": (np.array([0.0, 1.0]),
+             [np.array([]), np.array([1.0])],
+             np.array([0.5, 0.5])),
+    "midpoint": (np.array([0.0, 0.5]),
+                 [np.array([]), np.array([0.5])],
+                 np.array([0.0, 1.0])),
+    "kutta3": (np.array([0.0, 0.5, 1.0]),
+               [np.array([]), np.array([0.5]), np.array([-1.0, 2.0])],
+               np.array([1.0, 4.0, 1.0]) / 6.0),
+    "rk4": (np.array([0.0, 0.5, 0.5, 1.0]),
+            [np.array([]), np.array([0.5]), np.array([0.0, 0.5]), np.array([0.0, 0.0, 1.0])],
+            np.array([1.0, 2.0, 2.0, 1.0]) / 6.0),
+}
+
+
+def plan_rk(sde: SDE, ts, method: str = "heun") -> SolverPlan:
+    """rhoRK-DEIS: explicit RK on dy/drho = eps_hat(y, rho) (Eq. 17, Prop. 3).
+
+    ``method`` in {heun, midpoint, kutta3, rk4, dpm2}; ``dpm2`` is
+    DPM-Solver-2 (Lu et al. 2022): midpoint with its stage at the geometric
+    mean of (rho_k, rho_{k+1}), expressed here as a per-step a21.
+    """
+    ts = _f64(ts)
+    n = len(ts) - 1
+    tab = _TABLEAUS["midpoint" if method == "dpm2" else method]
+    c, a, b = tab
+    s = len(c)
+    rho = _f64(sde.rho(ts))
+    h = rho[1:] - rho[:-1]  # negative steps
+    a_mat = np.zeros((s, s))
+    for i, row in enumerate(a):
+        a_mat[i, : len(row)] = row
+    A = np.broadcast_to(a_mat, (n, s, s)).copy()
+    if method == "dpm2":
+        lam = -np.log(rho)
+        stage_lam = np.stack([lam[:-1], 0.5 * (lam[:-1] + lam[1:])], axis=1)
+        stage_rho = np.exp(-stage_lam)
+        # stage sits at the geometric mean of (rho_k, rho_{k+1}); advance the
+        # stage STATE there with a per-step a21 (exact for the EI transfer)
+        A[:, 1, 0] = (stage_rho[:, 1] - rho[:-1]) / h
+    else:
+        stage_rho = rho[:-1, None] + c[None, :] * h[:, None]
+        stage_rho = np.maximum(stage_rho, float(sde.rho(ts[-1])) * (1 - 1e-12))
+    stage_t = _f64(sde.t_of_rho(stage_rho))
+    coeffs = {"h": h, "mu": _f64(sde.mu(ts)), "stage_t": stage_t,
+              "stage_mu": _f64(sde.mu(stage_t)), "A": A, "b": b}
+    return _mk("rk", coeffs, ts, nfe=n * s)
+
+
+# ------------------------------------------------------------------- PNDM
+def plan_pndm(sde: SDE, ts) -> SolverPlan:
+    """Original PNDM (Liu et al. 2022): pseudo-RK4 warmup for the first 3
+    steps (4 NFE each, DDIM transfers precomputed as affine ratios) then
+    4th-order AB with DDIM transfer. NFE = N + 9."""
+    ts = _f64(ts)
+    n = len(ts) - 1
+    if n < 4:
+        raise ValueError("PNDM needs at least 4 steps")
+    mu, rho = _f64(sde.mu(ts)), _f64(sde.rho(ts))
+    tm = 0.5 * (ts[:-1] + ts[1:])
+    mu_mid, rho_mid = _f64(sde.mu(tm)), _f64(sde.rho(tm))
+    w = 3  # warmup steps (n >= 4 guaranteed)
+    # F_DDIM(x, eps; s->t) = (mu_t/mu_s) x + mu_t (rho_t - rho_s) eps, for
+    # the current->midpoint and current->next transfers of each warmup step
+    coeffs = {
+        "warm_ratio_m": mu_mid[:w] / mu[:w],
+        "warm_coef_m": mu_mid[:w] * (rho_mid[:w] - rho[:w]),
+        "warm_ratio_n": mu[1:w + 1] / mu[:w],
+        "warm_coef_n": mu[1:w + 1] * (rho[1:w + 1] - rho[:w]),
+        "warm_t_mid": tm[:w],
+    }
+    psi, C0 = C.ab_coefficients(sde, ts, 0, "t")
+    Cm = np.zeros((n, 4))
+    Cm[w:] = C0[w:, :1] * C.AB_WEIGHTS[3][None, :]
+    coeffs.update(psi=psi, C=Cm)
+    return _mk("pndm", coeffs, ts, nfe=n + 9)
+
+
+# ---------------------------------------------------------------- factory
+def make_plan(name: str, sde: SDE, ts, **kw) -> SolverPlan:
+    """Name-based factory mirroring ``make_solver``. Names: ddim, tab{0..3},
+    rhoab{0..3}, rho_heun, rho_midpoint, rho_kutta3, rho_rk4, dpm2, euler,
+    naive_ei, em, ddim_eta (requires explicit ``eta=``), ipndm{1..3}, pndm.
+    """
+    n = name.lower()
+    if n in ("ddim", "tab0", "rhoab0"):
+        return plan_ab(sde, ts, order=0, basis="t", **kw)
+    if n.startswith("tab"):
+        return plan_ab(sde, ts, order=int(n[3:]), basis="t", **kw)
+    if n.startswith("rhoab"):
+        return plan_ab(sde, ts, order=int(n[5:]), basis="rho", **kw)
+    if n.startswith("rho_"):
+        return plan_rk(sde, ts, method=n[4:])
+    if n == "dpm2":
+        return plan_rk(sde, ts, method="dpm2")
+    if n == "euler":
+        return plan_euler(sde, ts)
+    if n == "naive_ei":
+        return plan_ab(sde, ts, order=0, naive_ei=True)
+    if n == "em":
+        return plan_em(sde, ts, lam=kw.get("lam", 1.0))
+    if n == "ddim_eta":
+        if "eta" not in kw:
+            raise TypeError("make_plan('ddim_eta') requires an explicit eta= "
+                            "(eta=0 is deterministic DDIM, eta=1 ancestral)")
+        return plan_ddim(sde, ts, eta=kw["eta"])
+    if n.startswith("ipndm"):
+        order = int(n[5:]) if len(n) > 5 else 3
+        return plan_ipndm(sde, ts, order=order)
+    if n == "pndm":
+        return plan_pndm(sde, ts)
+    raise ValueError(f"unknown solver {name!r}")

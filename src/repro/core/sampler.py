@@ -1,0 +1,212 @@
+"""Single pure executor for every :class:`~repro.core.plan.SolverPlan`.
+
+Public API:
+
+  ``sample(plan, eps_fn, x_T, key=None, *, hooks=None)``
+      Run the full fixed-step solve (a ``lax.fori_loop`` for ab/rk plans;
+      PNDM's warmup is statically unrolled like the original algorithm).
+      Returns the final state ``x_0``, or ``(x_0, trajectory)`` when
+      ``hooks.record_trajectory`` is set.
+
+  ``step(plan, k, state, eps_fn, *, hooks=None)``
+      One solver step as a pure function on an explicit ``SamplerState``.
+      This is what serving uses to interleave steps across batches, stream
+      per-step progress, and resume mid-solve: ``sample`` is exactly
+      ``init_state`` + ``step`` iterated, so splitting a solve across calls
+      reproduces the one-shot result (to machine epsilon -- XLA may fuse the
+      loop body differently than an eagerly dispatched step). (For ``pndm``
+      plans the step index must be a concrete int -- warmup and tail steps
+      differ structurally, as in the original algorithm.)
+
+  ``init_state(plan, x_T, key=None)``
+      Build the initial ``SamplerState``. Stochastic plans require a PRNG
+      key; deterministic plans carry a dummy key untouched.
+
+Everything is a pytree in, pytree out -- ``jax.jit``/``vmap``/``pjit``
+compose over ``sample`` and ``step`` with the plan as a traced argument, so
+one compiled executor serves every plan with the same :attr:`SolverPlan.signature`.
+``Hooks`` are pytree-closed callables (guidance transforms close over arrays;
+no Python state), keeping the loop traceable.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+# Module-scope (NOT inside the traced loop body, where a failure would be
+# masked until first trace) -- but guarded: only fused plans need Pallas, so
+# an environment without it can still import and run every unfused plan.
+try:
+    from ..kernels.ops import deis_step as _fused_deis_step
+except ImportError as _e:  # pragma: no cover - depends on jax build
+    _fused_deis_step = None
+    _FUSED_IMPORT_ERROR = _e
+
+from .plan import SolverPlan
+
+Array = jax.Array
+EpsFn = Callable[[Array, Array], Array]
+
+
+class SamplerState(NamedTuple):
+    """Explicit solver state: everything needed to resume a solve mid-way."""
+    x: Array      # current iterate
+    hist: Array   # (R, *x.shape) eps history, newest first (R may be 0)
+    key: Array    # PRNG key (consumed only by stochastic plans)
+    k: Array      # int32 step counter (informational; `step` takes k explicitly)
+
+
+@dataclasses.dataclass(frozen=True)
+class Hooks:
+    """Pytree-closed per-step extension points.
+
+    eps_transform: ``(x, t, eps) -> eps`` applied to every network output
+        (guidance, thresholding). Must be traceable; closures over arrays ok.
+    record_trajectory: when True, ``sample`` also returns the (n_steps, ...)
+        stack of post-step iterates.
+    """
+    eps_transform: Optional[Callable[[Array, Array, Array], Array]] = None
+    record_trajectory: bool = False
+
+
+_DEFAULT_HOOKS = Hooks()
+
+
+def init_state(plan: SolverPlan, x_T: Array, key: Optional[Array] = None) -> SamplerState:
+    if plan.stochastic and key is None:
+        raise ValueError(f"stochastic plan (method={plan.method!r}) requires a PRNG key")
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    hist = jnp.zeros((plan.history_len,) + x_T.shape, x_T.dtype)
+    return SamplerState(x=x_T, hist=hist, key=key, k=jnp.int32(0))
+
+
+# ------------------------------------------------------------------ steps
+def _apply_eps(hooks: Hooks, x, t, eps):
+    return eps if hooks.eps_transform is None else hooks.eps_transform(x, t, eps)
+
+
+def _step_ab(plan: SolverPlan, k, state: SamplerState, eps_fn: EpsFn,
+             hooks: Hooks) -> SamplerState:
+    c = plan.coeffs
+    x, key = state.x, state.key
+    if plan.stochastic:
+        key, sub = jax.random.split(key)
+    eps = _apply_eps(hooks, x, plan.ts[k], eps_fn(x, plan.ts[k]))
+    hist = jnp.concatenate([eps[None], state.hist[:-1]], axis=0)
+    if plan.fused:
+        if _fused_deis_step is None:
+            raise ImportError("plan.fused=True requires the Pallas deis_step "
+                              "kernel, which failed to import"
+                              ) from _FUSED_IMPORT_ERROR
+        flat = x.reshape(-1, x.shape[-1]) if x.ndim > 1 else x.reshape(1, -1)
+        hflat = hist.reshape(hist.shape[0], *flat.shape)
+        out = _fused_deis_step(flat, hflat, c["psi"][k].astype(jnp.float32),
+                               c["C"][k].astype(jnp.float32))
+        x_new = out.reshape(x.shape)
+    else:
+        x_new = c["psi"][k] * x + jnp.tensordot(c["C"][k], hist, axes=1)
+    if plan.stochastic:
+        xi = jax.random.normal(sub, x.shape, x.dtype)
+        x_new = x_new + c["s"][k] * xi
+    return SamplerState(x=x_new, hist=hist, key=key, k=state.k + 1)
+
+
+def _step_rk(plan: SolverPlan, k, state: SamplerState, eps_fn: EpsFn,
+             hooks: Hooks) -> SamplerState:
+    c = plan.coeffs
+    x = state.x
+    n_stages = c["b"].shape[0]
+    h = c["h"][k]
+    y = x / c["mu"][k]
+    ks = jnp.zeros((n_stages,) + x.shape, x.dtype)
+    for i in range(n_stages):  # static unroll over stages
+        y_i = y + h * jnp.tensordot(c["A"][k, i], ks, axes=1)
+        x_i = c["stage_mu"][k, i] * y_i
+        k_i = _apply_eps(hooks, x_i, c["stage_t"][k, i],
+                         eps_fn(x_i, c["stage_t"][k, i]))
+        ks = ks.at[i].set(k_i)
+    y = y + h * jnp.tensordot(c["b"], ks, axes=1)
+    return SamplerState(x=c["mu"][k + 1] * y, hist=state.hist, key=state.key,
+                        k=state.k + 1)
+
+
+_N_WARMUP = 3  # PNDM pseudo-RK4 warmup steps
+
+
+def _step_pndm(plan: SolverPlan, k: int, state: SamplerState, eps_fn: EpsFn,
+               hooks: Hooks) -> SamplerState:
+    if isinstance(k, jax.core.Tracer):
+        raise TypeError("pndm steps differ structurally between warmup and "
+                        "tail; `k` must be a concrete int (python loop)")
+    k = int(k)
+    c = plan.coeffs
+    x = state.x
+    if k < _N_WARMUP:
+        t_c, t_m, t_n = plan.ts[k], c["warm_t_mid"][k], plan.ts[k + 1]
+        rm, cm = c["warm_ratio_m"][k], c["warm_coef_m"][k]
+        rn, cn = c["warm_ratio_n"][k], c["warm_coef_n"][k]
+        e1 = _apply_eps(hooks, x, t_c, eps_fn(x, t_c))
+        x1 = rm * x + cm * e1
+        e2 = _apply_eps(hooks, x1, t_m, eps_fn(x1, t_m))
+        x2 = rm * x + cm * e2
+        e3 = _apply_eps(hooks, x2, t_m, eps_fn(x2, t_m))
+        x3 = rn * x + cn * e3
+        e4 = _apply_eps(hooks, x3, t_n, eps_fn(x3, t_n))
+        e_prime = (e1 + 2 * e2 + 2 * e3 + e4) / 6.0
+        x_new = rn * x + cn * e_prime
+        hist = jnp.concatenate([e1[None], state.hist[:-1]], axis=0)
+    else:
+        e = _apply_eps(hooks, x, plan.ts[k], eps_fn(x, plan.ts[k]))
+        hist = jnp.concatenate([e[None], state.hist[:-1]], axis=0)
+        x_new = c["psi"][k] * x + jnp.tensordot(c["C"][k], hist, axes=1)
+    return SamplerState(x=x_new, hist=hist, key=state.key, k=state.k + 1)
+
+
+_STEPPERS = {"ab": _step_ab, "rk": _step_rk, "pndm": _step_pndm}
+
+
+def step(plan: SolverPlan, k, state: SamplerState, eps_fn: EpsFn, *,
+         hooks: Optional[Hooks] = None) -> SamplerState:
+    """Advance one solver step: ``state`` at time ``ts[k]`` -> ``ts[k+1]``."""
+    plan = plan.astype(state.x.dtype)
+    return _STEPPERS[plan.method](plan, k, state, eps_fn, hooks or _DEFAULT_HOOKS)
+
+
+def sample(plan: SolverPlan, eps_fn: EpsFn, x_T: Array,
+           key: Optional[Array] = None, *, hooks: Optional[Hooks] = None):
+    """Run the full solve from ``x_T`` at ``ts[0]`` down to ``ts[-1]``.
+
+    Returns ``x_0``, or ``(x_0, trajectory)`` if ``hooks.record_trajectory``.
+    """
+    hooks = hooks or _DEFAULT_HOOKS
+    state = init_state(plan, x_T, key)
+    plan = plan.astype(x_T.dtype)
+    n = plan.n_steps
+    stepper = _STEPPERS[plan.method]
+
+    if plan.method == "pndm":  # warmup/tail differ structurally: unroll
+        traj = []
+        for k in range(n):
+            state = stepper(plan, k, state, eps_fn, hooks)
+            if hooks.record_trajectory:
+                traj.append(state.x)
+        return (state.x, jnp.stack(traj)) if hooks.record_trajectory else state.x
+
+    if hooks.record_trajectory:
+        traj0 = jnp.zeros((n,) + x_T.shape, x_T.dtype)
+
+        def body_t(k, carry):
+            st, traj = carry
+            st = stepper(plan, k, st, eps_fn, hooks)
+            return st, traj.at[k].set(st.x)
+
+        state, traj = jax.lax.fori_loop(0, n, body_t, (state, traj0))
+        return state.x, traj
+
+    state = jax.lax.fori_loop(
+        0, n, lambda k, st: stepper(plan, k, st, eps_fn, hooks), state)
+    return state.x

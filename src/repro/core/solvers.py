@@ -1,23 +1,36 @@
-"""DEIS solver family + baselines (paper Secs. 3-4, App. H.2).
+"""Legacy class-based solver API -- thin deprecation shims over SolverPlans.
 
-Every solver is built once on the host (float64 numpy coefficient precompute)
-and exposes a jit-compatible ``sample(eps_fn, x_T, key=None)`` driving a
-``lax.fori_loop``. ``eps_fn(x, t_scalar) -> eps`` is the noise-prediction
-network (paper's Ingredient 2 parameterization); closures over parameters are
-fine and the loop is shardable under pjit.
+.. deprecated::
+    The class-per-solver API is superseded by the functional plan/step API:
 
-Solvers:
-  ABSolver        tAB-DEIS / rhoAB-DEIS, r in {0..3}; r=0 == deterministic DDIM
-                  (Prop. 2, tested); also 'naive EI' coefficients for Fig. 3.
-  RKSolver        rhoRK-DEIS on the transformed ODE dy/drho = eps-hat (Prop. 3):
-                  heun (== EDM/Karras, App. B Q4), midpoint (DPM-Solver2
-                  analogue, App. B Q5), kutta3, rk4.
-  EulerSolver     Euler on the x-space PF-ODE (Song et al. baseline).
-  EMSolver        Euler-Maruyama on the lambda-SDE (Eq. 4), lambda=1 default.
-  DDIMSolver      stochastic DDIM(eta) for VPSDE (Prop. 4).
-  IPNDMSolver     improved PNDM (App. H.2): classical uniform-grid AB weights
-                  with lower-order warmup + DDIM transfer.
-  PNDMSolver      original PNDM: pseudo-RK4 warmup (4 NFE x 3 steps) + AB4.
+        from repro.core import make_plan, sample
+        plan = make_plan("tab3", sde, ts)          # pure builder, pytree out
+        x0 = sample(plan, eps_fn, x_T)             # single jit/vmap-able executor
+
+    Every class below now just builds its :class:`~repro.core.plan.SolverPlan`
+    in ``__init__`` and delegates ``sample`` to
+    :func:`repro.core.sampler.sample`, so outputs are identical between the
+    two APIs by construction. New code (serving, benchmarks, anything that
+    wants per-step streaming, mid-solve resume, vmap over requests, or shared
+    jit executors) should use plans directly; see ``repro/core/plan.py``.
+
+Migration map (old -> new):
+
+    ABSolver(sde, ts, order, basis)    -> plan_ab(sde, ts, order, basis)
+    ABSolver(..., fused_update=True)   -> plan_ab(..., fused=True)
+    RKSolver(sde, ts, method)          -> plan_rk(sde, ts, method)
+    DPMSolver2(sde, ts)                -> plan_rk(sde, ts, method="dpm2")
+    EulerSolver(sde, ts)               -> plan_euler(sde, ts)
+    EMSolver(sde, ts, lam)             -> plan_em(sde, ts, lam)
+    DDIMSolver(sde, ts, eta)           -> plan_ddim(sde, ts, eta)
+    IPNDMSolver(sde, ts, order)        -> plan_ipndm(sde, ts, order)
+    PNDMSolver(sde, ts)                -> plan_pndm(sde, ts)
+    make_solver(name, sde, ts).sample  -> sample(make_plan(name, sde, ts), ...)
+
+The solver family itself is unchanged (paper Secs. 3-4, App. H.2): tAB/rhoAB-
+DEIS (r=0 == deterministic DDIM, Prop. 2), rhoRK-DEIS (heun == EDM/Karras,
+midpoint ~ DPM-Solver2), Euler, Euler-Maruyama on the lambda-SDE, stochastic
+DDIM(eta) (Prop. 4), iPNDM and PNDM.
 """
 from __future__ import annotations
 
@@ -25,10 +38,11 @@ import dataclasses
 from typing import Callable, Optional
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from . import coeffs as C
+from . import plan as P
+from . import sampler as S
+from .plan import _TABLEAUS  # re-export: likelihood.py builds RK grids from it
 from .sde import SDE, VPSDE
 
 Array = jax.Array
@@ -41,371 +55,125 @@ def _f64(x):
 
 @dataclasses.dataclass
 class SolverBase:
+    """Deprecated shim base: holds a SolverPlan and delegates sampling."""
+
     name: str
     nfe: int
     sde: SDE
     ts: np.ndarray
 
+    plan: Optional[P.SolverPlan] = dataclasses.field(default=None, repr=False)
+
     def sample(self, eps_fn: EpsFn, x_T: Array, key: Optional[Array] = None) -> Array:
-        raise NotImplementedError
+        if self.plan is None:
+            raise NotImplementedError
+        return S.sample(self.plan, eps_fn, x_T, key)
 
 
 class ABSolver(SolverBase):
-    """Exponential-integrator Adams-Bashforth (tAB/rhoAB-DEIS; r=0 is DDIM).
-
-    fused_update=True routes the Eq. 14 multistep combination through the
-    Pallas ``deis_step`` kernel (one HBM round-trip instead of r+2 on TPU;
-    interpret-mode on CPU -- equivalence-tested in tests/test_kernels.py).
-    """
+    """Shim for tAB/rhoAB-DEIS (r=0 is DDIM); see :func:`repro.core.plan.plan_ab`."""
 
     def __init__(self, sde: SDE, ts, order: int = 0, basis: str = "t",
                  name: str | None = None, naive_ei: bool = False,
                  fused_update: bool = False):
         ts = _f64(ts)
-        super().__init__(name or f"{basis}AB{order}", len(ts) - 1, sde, ts)
+        super().__init__(name or f"{basis}AB{order}", len(ts) - 1, sde, ts,
+                         P.plan_ab(sde, ts, order=order, basis=basis,
+                                   naive_ei=naive_ei, fused=fused_update))
         self.order = order
         self.fused_update = fused_update
-        if naive_ei:
-            if order != 0:
-                raise ValueError("naive EI is zero-order only")
-            psi, Cm = C.naive_ei_coefficients(sde, ts)
-        else:
-            psi, Cm = C.ab_coefficients(sde, ts, order, basis)
-        self.psi, self.C = psi, Cm
-
-    def sample(self, eps_fn, x_T, key=None):
-        n, order = len(self.ts) - 1, self.order
-        dtype = x_T.dtype
-        psi = jnp.asarray(self.psi, dtype)
-        Cm = jnp.asarray(self.C, dtype)
-        t_arr = jnp.asarray(self.ts, dtype)
-        fused = self.fused_update
-
-        def body(k, carry):
-            x, hist = carry
-            eps = eps_fn(x, t_arr[k])
-            hist = jnp.concatenate([eps[None], hist[:-1]], axis=0)
-            if fused:
-                from ..kernels.ops import deis_step as _fused
-                flat = x.reshape(-1, x.shape[-1]) if x.ndim > 1 else x.reshape(1, -1)
-                hflat = hist.reshape(hist.shape[0], *flat.shape)
-                out = _fused(flat, hflat, psi[k].astype(jnp.float32),
-                             Cm[k].astype(jnp.float32))
-                x = out.reshape(x.shape)
-            else:
-                comb = jnp.tensordot(Cm[k], hist, axes=1)
-                x = psi[k] * x + comb
-            return x, hist
-
-        hist0 = jnp.zeros((order + 1,) + x_T.shape, dtype)
-        x, _ = jax.lax.fori_loop(0, n, body, (x_T, hist0))
-        return x
-
-
-_TABLEAUS = {
-    "heun": (np.array([0.0, 1.0]),
-             [np.array([]), np.array([1.0])],
-             np.array([0.5, 0.5])),
-    "midpoint": (np.array([0.0, 0.5]),
-                 [np.array([]), np.array([0.5])],
-                 np.array([0.0, 1.0])),
-    "kutta3": (np.array([0.0, 0.5, 1.0]),
-               [np.array([]), np.array([0.5]), np.array([-1.0, 2.0])],
-               np.array([1.0, 4.0, 1.0]) / 6.0),
-    "rk4": (np.array([0.0, 0.5, 0.5, 1.0]),
-            [np.array([]), np.array([0.5]), np.array([0.0, 0.5]), np.array([0.0, 0.0, 1.0])],
-            np.array([1.0, 2.0, 2.0, 1.0]) / 6.0),
-}
 
 
 class RKSolver(SolverBase):
-    """rhoRK-DEIS: classical explicit RK on dy/drho = eps_hat(y, rho) (Eq. 17)."""
+    """Shim for rhoRK-DEIS; see :func:`repro.core.plan.plan_rk`."""
 
     def __init__(self, sde: SDE, ts, method: str = "heun", name: str | None = None):
         ts = _f64(ts)
-        c, a, b = _TABLEAUS[method]
-        super().__init__(name or f"rho_{method}", (len(ts) - 1) * len(c), sde, ts)
-        self.method, self.c, self.a, self.b = method, c, a, b
-        rho = _f64(sde.rho(ts))
-        self.h = rho[1:] - rho[:-1]  # negative steps
-        # stage times/scales, shape (N, S): rho_s = rho_k + c_s * h_k
-        stage_rho = rho[:-1, None] + c[None, :] * self.h[:, None]
-        stage_rho = np.maximum(stage_rho, float(sde.rho(ts[-1])) * (1 - 1e-12))
-        self.stage_t = _f64(sde.t_of_rho(stage_rho))
-        self.stage_mu = _f64(sde.mu(self.stage_t))
-        self.mu = _f64(sde.mu(ts))
-
-    def sample(self, eps_fn, x_T, key=None):
-        n = len(self.ts) - 1
-        dtype = x_T.dtype
-        s = len(self.c)
-        h = jnp.asarray(self.h, dtype)
-        st_t = jnp.asarray(self.stage_t, dtype)
-        st_mu = jnp.asarray(self.stage_mu, dtype)
-        mu = jnp.asarray(self.mu, dtype)
-        a_mat = np.zeros((s, s))
-        for i, row in enumerate(self.a):
-            a_mat[i, : len(row)] = row
-        a_mat = jnp.asarray(a_mat, dtype)
-        b = jnp.asarray(self.b, dtype)
-
-        def body(k, x):
-            y = x / mu[k]
-            ks = jnp.zeros((s,) + x.shape, dtype)
-            for i in range(s):  # static unroll over stages
-                y_i = y + h[k] * jnp.tensordot(a_mat[i], ks, axes=1)
-                k_i = eps_fn(st_mu[k, i] * y_i, st_t[k, i])
-                ks = ks.at[i].set(k_i)
-            y = y + h[k] * jnp.tensordot(b, ks, axes=1)
-            return mu[k + 1] * y
-
-        return jax.lax.fori_loop(0, n, body, x_T)
+        plan = P.plan_rk(sde, ts, method=method)
+        super().__init__(name or f"rho_{method}", plan.nfe, sde, ts, plan)
+        self.method = method
 
 
 class DPMSolver2(RKSolver):
-    """DPM-Solver-2 (Lu et al. 2022; paper App. B Q5, Algo 2): the midpoint
-    method in half-log-SNR lambda = -log rho. Identical to rhoRK-midpoint
-    except the stage sits at the GEOMETRIC mean of (rho_k, rho_{k+1}) instead
-    of the arithmetic mean -- implemented here to reproduce the paper's
-    Table 3 comparison."""
+    """Shim for DPM-Solver-2 (Lu et al. 2022) == plan_rk(method="dpm2")."""
 
     def __init__(self, sde: SDE, ts, name: str = "dpm2"):
-        super().__init__(sde, ts, method="midpoint", name=name)
-        ts = self.ts
-        rho = _f64(sde.rho(ts))
-        lam = -np.log(rho)
-        stage_lam = np.stack([lam[:-1],
-                              0.5 * (lam[:-1] + lam[1:])], axis=1)
-        stage_rho = np.exp(-stage_lam)
-        self.stage_t = _f64(sde.t_of_rho(stage_rho))
-        self.stage_mu = _f64(sde.mu(self.stage_t))
-        # midpoint tableau expects the stage at rho_k + 0.5*h; our stage is at
-        # geometric mean -- adjust a21 so the stage STATE is advanced to the
-        # actual stage rho (exact for the EI transfer):
-        self._stage_frac = (stage_rho[:, 1] - rho[:-1]) / self.h
-
-    def sample(self, eps_fn, x_T, key=None):
-        n = len(self.ts) - 1
-        dtype = x_T.dtype
-        h = jnp.asarray(self.h, dtype)
-        st_t = jnp.asarray(self.stage_t, dtype)
-        st_mu = jnp.asarray(self.stage_mu, dtype)
-        mu = jnp.asarray(self.mu, dtype)
-        frac = jnp.asarray(self._stage_frac, dtype)
-
-        def body(k, x):
-            y = x / mu[k]
-            k1 = eps_fn(st_mu[k, 0] * y, st_t[k, 0])
-            y_mid = y + h[k] * frac[k] * k1
-            k2 = eps_fn(st_mu[k, 1] * y_mid, st_t[k, 1])
-            y = y + h[k] * k2
-            return mu[k + 1] * y
-
-        return jax.lax.fori_loop(0, n, body, x_T)
+        super().__init__(sde, ts, method="dpm2", name=name)
 
 
 class EulerSolver(SolverBase):
-    """Explicit Euler on the x-space PF-ODE (Eq. 7 with eps-parameterization)."""
+    """Shim for Euler on the x-space PF-ODE; see :func:`plan_euler`."""
 
     def __init__(self, sde: SDE, ts, name: str = "euler"):
         ts = _f64(ts)
-        super().__init__(name, len(ts) - 1, sde, ts)
-        self.f = _f64(sde.f(ts[:-1]))
-        self.coef = 0.5 * _f64(sde.g2(ts[:-1])) / _f64(sde.sigma(ts[:-1]))
-        self.dt = ts[1:] - ts[:-1]
-
-    def sample(self, eps_fn, x_T, key=None):
-        dtype = x_T.dtype
-        f = jnp.asarray(self.f, dtype)
-        coef = jnp.asarray(self.coef, dtype)
-        dt = jnp.asarray(self.dt, dtype)
-        t_arr = jnp.asarray(self.ts, dtype)
-
-        def body(k, x):
-            eps = eps_fn(x, t_arr[k])
-            dx = f[k] * x + coef[k] * eps
-            return x + dt[k] * dx
-
-        return jax.lax.fori_loop(0, len(self.ts) - 1, body, x_T)
+        super().__init__(name, len(ts) - 1, sde, ts, P.plan_euler(sde, ts))
 
 
 class EMSolver(SolverBase):
-    """Euler-Maruyama on the lambda-SDE (Eq. 4); lambda=1 = reverse diffusion."""
+    """Shim for Euler-Maruyama on the lambda-SDE; see :func:`plan_em`."""
 
     def __init__(self, sde: SDE, ts, lam: float = 1.0, name: str | None = None):
         ts = _f64(ts)
-        super().__init__(name or f"em_lam{lam:g}", len(ts) - 1, sde, ts)
+        super().__init__(name or f"em_lam{lam:g}", len(ts) - 1, sde, ts,
+                         P.plan_em(sde, ts, lam=lam))
         self.lam = lam
-        self.f = _f64(sde.f(ts[:-1]))
-        self.coef = 0.5 * (1 + lam ** 2) * _f64(sde.g2(ts[:-1])) / _f64(sde.sigma(ts[:-1]))
-        self.g = np.sqrt(_f64(sde.g2(ts[:-1])))
-        self.dt = ts[1:] - ts[:-1]
 
     def sample(self, eps_fn, x_T, key=None):
         if key is None:
             raise ValueError("EMSolver requires a PRNG key")
-        dtype = x_T.dtype
-        f = jnp.asarray(self.f, dtype)
-        coef = jnp.asarray(self.coef, dtype)
-        g = jnp.asarray(self.g, dtype)
-        dt = jnp.asarray(self.dt, dtype)
-        t_arr = jnp.asarray(self.ts, dtype)
-        lam = self.lam
-
-        def body(k, carry):
-            x, k_rng = carry
-            k_rng, sub = jax.random.split(k_rng)
-            eps = eps_fn(x, t_arr[k])
-            drift = f[k] * x + coef[k] * eps
-            noise = jax.random.normal(sub, x.shape, dtype)
-            x = x + dt[k] * drift + lam * g[k] * jnp.sqrt(-dt[k]) * noise
-            return x, k_rng
-
-        x, _ = jax.lax.fori_loop(0, len(self.ts) - 1, body, (x_T, key))
-        return x
+        return super().sample(eps_fn, x_T, key)
 
 
 class DDIMSolver(SolverBase):
-    """Stochastic DDIM(eta) for VPSDE (Eq. 34; eta=0 == ABSolver order 0)."""
+    """Shim for stochastic DDIM(eta); see :func:`plan_ddim`."""
 
     def __init__(self, sde: VPSDE, ts, eta: float = 0.0, name: str | None = None):
-        if not isinstance(sde, VPSDE):
-            raise TypeError("stochastic DDIM is defined for VPSDE")
         ts = _f64(ts)
-        super().__init__(name or f"ddim_eta{eta:g}", len(ts) - 1, sde, ts)
-        ab = _f64(sde.alpha_bar(ts))
+        super().__init__(name or f"ddim_eta{eta:g}", len(ts) - 1, sde, ts,
+                         P.plan_ddim(sde, ts, eta=eta))
         self.eta = eta
-        sig2 = (eta ** 2) * (1 - ab[1:]) / (1 - ab[:-1]) * (1 - ab[:-1] / ab[1:])
-        sig2 = np.maximum(sig2, 0.0)
-        self.a = np.sqrt(ab[1:] / ab[:-1])
-        # x' = a x + b eps + s xi,  b = sqrt(1-ab'-sig2) - a sqrt(1-ab)
-        self.b = np.sqrt(np.maximum(1 - ab[1:] - sig2, 0.0)) - self.a * np.sqrt(1 - ab[:-1])
-        self.s = np.sqrt(sig2)
 
     def sample(self, eps_fn, x_T, key=None):
         if self.eta > 0 and key is None:
             raise ValueError("stochastic DDIM requires a PRNG key")
-        dtype = x_T.dtype
-        a = jnp.asarray(self.a, dtype)
-        b = jnp.asarray(self.b, dtype)
-        s = jnp.asarray(self.s, dtype)
-        t_arr = jnp.asarray(self.ts, dtype)
-        key = key if key is not None else jax.random.PRNGKey(0)
-
-        def body(k, carry):
-            x, k_rng = carry
-            k_rng, sub = jax.random.split(k_rng)
-            eps = eps_fn(x, t_arr[k])
-            xi = jax.random.normal(sub, x.shape, dtype)
-            return a[k] * x + b[k] * eps + s[k] * xi, k_rng
-
-        x, _ = jax.lax.fori_loop(0, len(self.ts) - 1, body, (x_T, key))
-        return x
+        return super().sample(eps_fn, x_T, key)
 
 
 class IPNDMSolver(SolverBase):
-    """Improved PNDM (paper App. H.2, Algo 4): classical uniform-grid AB
-    weights on the eps history, with lower-order warmup, + DDIM transfer."""
+    """Shim for improved PNDM; see :func:`plan_ipndm`."""
 
     def __init__(self, sde: SDE, ts, order: int = 3, name: str | None = None):
         ts = _f64(ts)
-        super().__init__(name or f"ipndm{order}", len(ts) - 1, sde, ts)
+        super().__init__(name or f"ipndm{order}", len(ts) - 1, sde, ts,
+                         P.plan_ipndm(sde, ts, order=order))
         self.order = order
-        psi, C0 = C.ab_coefficients(sde, ts, 0, "t")
-        self.psi, self.C0 = psi, C0[:, 0]
-        # per-step fixed AB weights with warmup, shape (N, order+1)
-        n = len(ts) - 1
-        W = np.zeros((n, order + 1))
-        for k in range(n):
-            r_eff = min(order, k)
-            W[k, : r_eff + 1] = C.AB_WEIGHTS[r_eff]
-        self.W = W
-
-    def sample(self, eps_fn, x_T, key=None):
-        dtype = x_T.dtype
-        psi = jnp.asarray(self.psi, dtype)
-        C0 = jnp.asarray(self.C0, dtype)
-        W = jnp.asarray(self.W, dtype)
-        t_arr = jnp.asarray(self.ts, dtype)
-        order = self.order
-
-        def body(k, carry):
-            x, hist = carry
-            eps = eps_fn(x, t_arr[k])
-            hist = jnp.concatenate([eps[None], hist[:-1]], axis=0)
-            eps_hat = jnp.tensordot(W[k], hist, axes=1)
-            return psi[k] * x + C0[k] * eps_hat, hist
-
-        hist0 = jnp.zeros((order + 1,) + x_T.shape, dtype)
-        x, _ = jax.lax.fori_loop(0, len(self.ts) - 1, body, (x_T, hist0))
-        return x
 
 
 class PNDMSolver(SolverBase):
-    """Original PNDM (Liu et al. 2022): pseudo-RK4 warmup for the first 3 steps
-    (4 NFE each) then 4th-order AB with DDIM transfer. NFE = N + 9."""
+    """Shim for original PNDM (NFE = N + 9); see :func:`plan_pndm`."""
 
     def __init__(self, sde: SDE, ts, name: str = "pndm"):
         ts = _f64(ts)
-        if len(ts) - 1 < 4:
-            raise ValueError("PNDM needs at least 4 steps")
-        super().__init__(name, (len(ts) - 1) + 9, sde, ts)
-        self.mu = _f64(sde.mu(ts))
-        self.rho = _f64(sde.rho(ts))
-        # warmup midpoints in t
-        tm = 0.5 * (ts[:-1] + ts[1:])
-        self.mu_mid = _f64(sde.mu(tm))
-        self.rho_mid = _f64(sde.rho(tm))
-        self.t_mid = tm
-        psi, C0 = C.ab_coefficients(sde, ts, 0, "t")
-        self.psi, self.C0 = psi, C0[:, 0]
-
-    def _transfer(self, x, eps, mu_s, rho_s, mu_t, rho_t):
-        """F_DDIM (Eq. 22 generalized): x' = (mu_t/mu_s) x + mu_t (rho_t - rho_s) eps."""
-        return (mu_t / mu_s) * x + mu_t * (rho_t - rho_s) * eps
-
-    def sample(self, eps_fn, x_T, key=None):
-        dtype = x_T.dtype
-        ts = self.ts
-        mu, rho = self.mu, self.rho
-        n = len(ts) - 1
-        hist = []
-        x = x_T
-        for k in range(min(3, n)):  # pseudo-RK4 warmup (python unrolled; n static)
-            t_c, t_m, t_n = ts[k], self.t_mid[k], ts[k + 1]
-            m_c, r_c = mu[k], rho[k]
-            m_m, r_m = self.mu_mid[k], self.rho_mid[k]
-            m_n, r_n = mu[k + 1], rho[k + 1]
-            e1 = eps_fn(x, jnp.asarray(t_c, dtype))
-            x1 = self._transfer(x, e1, m_c, r_c, m_m, r_m)
-            e2 = eps_fn(x1, jnp.asarray(t_m, dtype))
-            x2 = self._transfer(x, e2, m_c, r_c, m_m, r_m)
-            e3 = eps_fn(x2, jnp.asarray(t_m, dtype))
-            x3 = self._transfer(x, e3, m_c, r_c, m_n, r_n)
-            e4 = eps_fn(x3, jnp.asarray(t_n, dtype))
-            e_prime = (e1 + 2 * e2 + 2 * e3 + e4) / 6.0
-            x = self._transfer(x, e_prime, m_c, r_c, m_n, r_n)
-            hist = [e1] + hist
-            hist = hist[:4]
-        w4 = C.AB_WEIGHTS[3]
-        for k in range(min(3, n), n):
-            e = eps_fn(x, jnp.asarray(ts[k], dtype))
-            hist = [e] + hist[:3]
-            e_hat = sum(float(w4[j]) * hist[j] for j in range(4))
-            x = self.psi[k] * x + self.C0[k] * e_hat
-        return x
+        plan = P.plan_pndm(sde, ts)
+        super().__init__(name, plan.nfe, sde, ts, plan)
 
 
 def make_solver(name: str, sde: SDE, ts, **kw) -> SolverBase:
-    """Factory. Names: ddim, tab{0..3}, rhoab{0..3}, rho_heun, rho_midpoint,
-    rho_kutta3, rho_rk4, euler, naive_ei, em, ddim_eta, ipndm{1..3}, pndm."""
+    """Deprecated factory (prefer :func:`repro.core.plan.make_plan`).
+
+    Names: ddim, tab{0..3}, rhoab{0..3}, rho_heun, rho_midpoint, rho_kutta3,
+    rho_rk4, dpm2, euler, naive_ei, em, ddim_eta (requires explicit ``eta=``),
+    ipndm{1..3}, pndm.
+    """
     n = name.lower()
-    if n == "ddim" or n == "tab0" or n == "rhoab0":
+    if n in ("ddim", "tab0", "rhoab0"):
         return ABSolver(sde, ts, order=0, basis="t", name=name)
     if n.startswith("tab"):
-        return ABSolver(sde, ts, order=int(n[3:]), basis="t", name=name)
+        return ABSolver(sde, ts, order=int(n[3:]), basis="t", name=name,
+                        fused_update=kw.get("fused_update", False))
     if n.startswith("rhoab"):
-        return ABSolver(sde, ts, order=int(n[5:]), basis="rho", name=name)
+        return ABSolver(sde, ts, order=int(n[5:]), basis="rho", name=name,
+                        fused_update=kw.get("fused_update", False))
     if n.startswith("rho_"):
         return RKSolver(sde, ts, method=n[4:], name=name)
     if n == "dpm2":
@@ -417,7 +185,13 @@ def make_solver(name: str, sde: SDE, ts, **kw) -> SolverBase:
     if n == "em":
         return EMSolver(sde, ts, lam=kw.get("lam", 1.0))
     if n == "ddim_eta":
-        return DDIMSolver(sde, ts, eta=kw.get("eta", 1.0))
+        if "eta" not in kw:
+            raise TypeError(
+                "make_solver('ddim_eta') requires an explicit eta= "
+                "(eta=0 is deterministic DDIM, eta=1 ancestral sampling); "
+                "the old silent eta=1.0 default conflicted with DDIMSolver's "
+                "eta=0.0 default")
+        return DDIMSolver(sde, ts, eta=kw["eta"])
     if n.startswith("ipndm"):
         order = int(n[5:]) if len(n) > 5 else 3
         return IPNDMSolver(sde, ts, order=order, name=name)

@@ -15,6 +15,8 @@ import jax
 import jax.numpy as jnp
 
 from ..configs.base import ModelConfig
+from ..core import sampler as SAMPLER
+from ..core.plan import SolverPlan
 from ..core.sde import SDE
 from ..core.solvers import SolverBase
 from ..models import transformer as T
@@ -82,16 +84,32 @@ def make_eps_fn(params, cfg: ModelConfig, *, prefix=None, frames=None,
     return eps_fn
 
 
-def sample_tokens(params, cfg: ModelConfig, solver: SolverBase, key, *,
-                  batch: int, seq_len: int, prefix=None, frames=None,
-                  use_pallas: bool = False):
-    """Generate token sequences with a DEIS solver. Returns (tokens, x0)."""
-    sde = solver.sde
+def sample_tokens(params, cfg: ModelConfig, plan: SolverPlan | SolverBase, key,
+                  *, batch: int, seq_len: int, prior_std: float | None = None,
+                  prefix=None, frames=None, use_pallas: bool = False,
+                  hooks=None):
+    """Generate token sequences with a DEIS ``SolverPlan``. Returns (tokens, x0).
+
+    ``plan`` may also be a legacy solver shim (its plan is used and
+    ``prior_std`` is taken from the shim's SDE). A bare plan carries no SDE,
+    so ``prior_std`` must be passed explicitly (``sde.prior_std()``).
+    Jit-compatible with ``plan`` as a traced pytree argument, so one compiled
+    executor serves every plan with the same signature at fixed
+    (batch, seq_len).
+    """
+    if isinstance(plan, SolverBase):
+        prior_std = plan.sde.prior_std()
+        plan = plan.plan
+    elif prior_std is None:
+        raise TypeError("sample_tokens with a bare SolverPlan requires "
+                        "prior_std= (use sde.prior_std(); a plan carries no "
+                        "SDE to recover it from)")
     eps_fn = make_eps_fn(params, cfg, prefix=prefix, frames=frames,
                          use_pallas=use_pallas)
-    x_T = jax.random.normal(key, (batch, seq_len, cfg.d_model), jnp.float32) \
-        * sde.prior_std()
-    x0 = solver.sample(eps_fn, x_T)
+    k_prior, k_solve = jax.random.split(key)
+    x_T = jax.random.normal(k_prior, (batch, seq_len, cfg.d_model), jnp.float32) \
+        * prior_std
+    x0 = SAMPLER.sample(plan, eps_fn, x_T, k_solve, hooks=hooks)
     head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
     logits = (x0 / X0_SCALE) @ head.astype(jnp.float32)
     return jnp.argmax(logits, -1), x0

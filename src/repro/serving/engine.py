@@ -21,7 +21,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..configs.base import ModelConfig
-from ..core import get_timesteps, make_solver
+from ..core import get_timesteps, make_plan
+from ..core.plan import SolverPlan
 from ..core.sde import SDE, VPSDE
 from ..diffusion import lm as DLM
 from ..models import transformer as T
@@ -36,6 +37,7 @@ class Request:
     seq_len: int = 64                      # diffusion: sample length
     nfe: int = 10
     solver: str = "tab3"
+    eta: float | None = None               # required iff solver == "ddim_eta"
     seed: int = 0
 
 
@@ -96,7 +98,17 @@ class ARServeEngine:
 
 
 class DiffusionServeEngine:
-    """Batched DEIS sampling service (the paper's technique as a server)."""
+    """Batched DEIS sampling service (the paper's technique as a server).
+
+    Plans are data, not code: each (solver, nfe) pair builds one immutable
+    ``SolverPlan`` (cached host-side), and the jitted executor takes the plan
+    as a *traced* pytree argument. The compile cache is therefore keyed on
+    ``(plan.signature, batch, seq_len)`` -- every solver name whose plan has
+    the same step method and coefficient shapes (e.g. ddim / euler /
+    naive_ei at equal NFE, or em / ddim_eta, or ipndm-r / tab-r) reuses one
+    compiled executor instead of exploding the jit cache across all 20
+    solver names x NFE settings.
+    """
 
     def __init__(self, params, cfg: ModelConfig, sde: Optional[SDE] = None,
                  schedule: str = "quadratic"):
@@ -104,33 +116,49 @@ class DiffusionServeEngine:
         self.params, self.cfg = params, cfg
         self.sde = sde or VPSDE()
         self.schedule = schedule
-        self._compiled = {}
+        self._plans: dict = {}      # (solver, nfe, eta) -> SolverPlan
+        self._compiled: dict = {}   # (plan.signature, batch, seq_len) -> jitted fn
 
-    def _sampler(self, solver: str, nfe: int, batch: int, seq_len: int):
-        key_ = (solver, nfe, batch, seq_len)
-        if key_ not in self._compiled:
+    def _plan(self, solver: str, nfe: int, eta: float | None) -> SolverPlan:
+        if solver == "ddim_eta" and eta is None:
+            raise ValueError("Request(solver='ddim_eta') requires an explicit "
+                             "eta= (eta=0 deterministic, eta=1 ancestral)")
+        key_ = (solver, nfe, eta)
+        if key_ not in self._plans:
             ts = get_timesteps(self.sde, nfe, self.schedule)
-            sol = make_solver(solver, self.sde, ts)
+            kw = {"eta": eta} if solver == "ddim_eta" else {}
+            self._plans[key_] = make_plan(solver, self.sde, ts, **kw)
+        return self._plans[key_]
 
-            def run(params, rng):
-                return DLM.sample_tokens(params, self.cfg, sol, rng,
-                                         batch=batch, seq_len=seq_len)[0]
+    def _executor(self, plan: SolverPlan, batch: int, seq_len: int):
+        key_ = (plan.signature, batch, seq_len)
+        if key_ not in self._compiled:
+            prior_std = self.sde.prior_std()
+
+            def run(params, plan_arg, rng):
+                return DLM.sample_tokens(params, self.cfg, plan_arg, rng,
+                                         batch=batch, seq_len=seq_len,
+                                         prior_std=prior_std)[0]
 
             self._compiled[key_] = jax.jit(run)
         return self._compiled[key_]
 
     def serve(self, requests: list[Request]) -> list[Result]:
-        """Group by (solver, nfe, seq_len) and run one batched solve each."""
+        """Group by (solver, nfe, seq_len[, eta]) and run one batched solve each."""
         groups = defaultdict(list)
         for r in requests:
-            groups[(r.solver, r.nfe, r.seq_len)].append(r)
+            # eta only distinguishes ddim_eta plans; don't split batchable
+            # groups of other solvers on an ignored field
+            eta = r.eta if r.solver == "ddim_eta" else None
+            groups[(r.solver, r.nfe, r.seq_len, eta)].append(r)
         results = []
-        for (solver, nfe, seq_len), reqs in groups.items():
+        for (solver, nfe, seq_len, eta), reqs in groups.items():
             t0 = time.time()
-            fn = self._sampler(solver, nfe, len(reqs), seq_len)
+            plan = self._plan(solver, nfe, eta)
+            fn = self._executor(plan, len(reqs), seq_len)
             rng = jax.random.PRNGKey(reqs[0].seed)
-            toks = np.asarray(fn(self.params, rng))
+            toks = np.asarray(fn(self.params, plan, rng))
             dt = time.time() - t0
             for i, r in enumerate(reqs):
-                results.append(Result(r.uid, toks[i], dt, nfe=nfe))
+                results.append(Result(r.uid, toks[i], dt, nfe=plan.nfe))
         return results

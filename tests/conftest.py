@@ -1,9 +1,38 @@
+import sys
+import types
+
 import jax
 import pytest
 
 # float64 for numerical-analysis tests (solver orders, coefficient identities).
 # Model/kernel tests explicitly cast to float32/bfloat16 where relevant.
 jax.config.update("jax_enable_x64", True)
+
+# hypothesis is optional: on a stock environment without it, property-based
+# tests skip instead of breaking collection for the whole suite.
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    _hyp = types.ModuleType("hypothesis")
+    _st = types.ModuleType("hypothesis.strategies")
+
+    def _given(*_a, **_k):
+        def deco(fn):
+            return pytest.mark.skip(reason="hypothesis not installed")(fn)
+        return deco
+
+    def _settings(*_a, **_k):
+        return lambda fn: fn
+
+    def _strategy(*_a, **_k):
+        return None
+
+    for _name in ("integers", "floats", "booleans", "sampled_from", "lists",
+                  "tuples", "just", "one_of"):
+        setattr(_st, _name, _strategy)
+    _hyp.given, _hyp.settings, _hyp.strategies = _given, _settings, _st
+    sys.modules["hypothesis"] = _hyp
+    sys.modules["hypothesis.strategies"] = _st
 
 
 @pytest.fixture(scope="session")

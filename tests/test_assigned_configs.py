@@ -75,3 +75,24 @@ def test_param_counts_roughly_match_names():
     assert 2.0e9 < count("gemma_2b") < 3.2e9
     assert 2.2e9 < count("mamba2_2p7b") < 3.4e9
     assert 300e9 < count("jamba_1p5_large") < 480e9
+
+
+def test_config_from_dict_strict_converter():
+    """The local dict->dataclass converter (dacite replacement): nested
+    dataclasses recurse, unknown keys raise, type mismatches raise."""
+    from repro.configs.base import MoEConfig, config_from_dict
+
+    cfg = config_from_dict({"name": "m", "n_layers": 2, "d_model": 64,
+                            "moe": {"num_experts": 4, "top_k": 1},
+                            "rope_theta": 10000})
+    assert cfg.n_layers == 2
+    assert isinstance(cfg.moe, MoEConfig) and cfg.moe.num_experts == 4
+    assert cfg.rope_theta == 10000.0 and isinstance(cfg.rope_theta, float)
+    assert config_from_dict({"ssm": None}).ssm is None
+
+    with pytest.raises(ValueError, match="unknown keys"):
+        config_from_dict({"not_a_field": 1})
+    with pytest.raises(ValueError, match="unknown keys"):
+        config_from_dict({"moe": {"bogus": 1}})
+    with pytest.raises(TypeError):
+        config_from_dict({"n_layers": "four"})

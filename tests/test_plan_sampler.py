@@ -1,0 +1,189 @@
+"""Plan/step sampler API: legacy-class <-> SolverPlan equivalence for every
+solver name, step-wise resume, hooks, jit/vmap composition, and the
+explicit-eta factory contract."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (VPSDE, Hooks, SOLVER_NAMES, get_timesteps, init_state,
+                        make_plan, make_solver, plan_ddim, sample, step)
+from repro.diffusion.analytic import GaussianData
+
+SDE = VPSDE()
+TS = get_timesteps(SDE, 8, "quadratic")
+KEY = jax.random.PRNGKey(7)
+
+
+def _problem(d=4, batch=8):
+    g = GaussianData(SDE, mean=np.full(d, 1.5), var=np.full(d, 0.25))
+    xT = jax.random.normal(jax.random.PRNGKey(0), (batch, d)) * SDE.prior_std()
+    return g.eps_fn(), xT
+
+
+def _kw(name):
+    return {"eta": 1.0} if name == "ddim_eta" else {}
+
+
+# ------------------------------------------------- legacy <-> plan equivalence
+@pytest.mark.parametrize("name", SOLVER_NAMES)
+def test_legacy_class_equals_plan_path(name):
+    """Every solver name produces identical samples via the legacy class shim
+    and the SolverPlan path (deterministic: same arrays; stochastic: same
+    arrays under a fixed key)."""
+    eps, xT = _problem()
+    x_plan = sample(make_plan(name, SDE, TS, **_kw(name)), eps, xT, KEY)
+    x_legacy = make_solver(name, SDE, TS, **_kw(name)).sample(eps, xT, KEY)
+    np.testing.assert_array_equal(np.asarray(x_plan), np.asarray(x_legacy))
+
+
+def test_plan_matches_hand_rolled_ddim_eta():
+    """Golden pre-redesign formula (Eq. 34): x' = a x + b eps + s xi with the
+    per-step key-split pattern -- guards the redesign against drift."""
+    eps, xT = _problem()
+    eta = 1.0
+    ab = np.asarray(SDE.alpha_bar(TS), dtype=np.float64)
+    sig2 = (eta ** 2) * (1 - ab[1:]) / (1 - ab[:-1]) * (1 - ab[:-1] / ab[1:])
+    sig2 = np.maximum(sig2, 0.0)
+    a = np.sqrt(ab[1:] / ab[:-1])
+    b = np.sqrt(np.maximum(1 - ab[1:] - sig2, 0.0)) - a * np.sqrt(1 - ab[:-1])
+    s = np.sqrt(sig2)
+    x, key = xT, KEY
+    for k in range(len(TS) - 1):
+        key, sub = jax.random.split(key)
+        e = eps(x, jnp.asarray(TS[k], x.dtype))
+        xi = jax.random.normal(sub, x.shape, x.dtype)
+        x = a[k] * x + b[k] * e + s[k] * xi
+    got = sample(plan_ddim(SDE, TS, eta=eta), eps, xT, KEY)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(x), rtol=1e-10,
+                               atol=1e-10)
+
+
+def test_plan_matches_hand_rolled_euler():
+    """Golden pre-redesign Euler loop: x += dt (f x + g^2/(2 sigma) eps)."""
+    eps, xT = _problem()
+    f = np.asarray(SDE.f(TS[:-1]), dtype=np.float64)
+    coef = 0.5 * np.asarray(SDE.g2(TS[:-1]), np.float64) \
+        / np.asarray(SDE.sigma(TS[:-1]), np.float64)
+    dt = TS[1:] - TS[:-1]
+    x = xT
+    for k in range(len(TS) - 1):
+        e = eps(x, jnp.asarray(TS[k], x.dtype))
+        x = x + dt[k] * (f[k] * x + coef[k] * e)
+    got = sample(make_plan("euler", SDE, TS), eps, xT)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(x), rtol=1e-10,
+                               atol=1e-10)
+
+
+# ----------------------------------------------------------- step / resume
+@pytest.mark.parametrize("name", ["ddim", "tab3", "rho_heun", "dpm2", "em",
+                                  "ddim_eta", "ipndm3", "pndm"])
+def test_step_loop_matches_sample(name):
+    """sample() == init_state() + step() iterated -- the streaming/resume
+    contract serving relies on."""
+    eps, xT = _problem()
+    plan = make_plan(name, SDE, TS, **_kw(name))
+    want = sample(plan, eps, xT, KEY)
+    st = init_state(plan, xT, KEY)
+    for k in range(plan.n_steps):
+        st = step(plan, k, st, eps)
+    np.testing.assert_allclose(np.asarray(st.x), np.asarray(want),
+                               rtol=1e-10, atol=1e-12)
+    assert int(st.k) == plan.n_steps
+
+
+def test_mid_solve_resume():
+    """A solve split across two owners (SamplerState handed over mid-way)
+    equals the uninterrupted solve."""
+    eps, xT = _problem()
+    plan = make_plan("tab2", SDE, TS)
+    st = init_state(plan, xT)
+    for k in range(plan.n_steps // 2):
+        st = step(plan, k, st, eps)
+    handoff = jax.tree.map(jnp.array, st)  # serialize/restore stand-in
+    for k in range(plan.n_steps // 2, plan.n_steps):
+        handoff = step(plan, k, handoff, eps)
+    want = sample(plan, eps, xT)
+    np.testing.assert_allclose(np.asarray(handoff.x), np.asarray(want),
+                               rtol=1e-10, atol=1e-12)
+
+
+def test_stochastic_plan_requires_key():
+    eps, xT = _problem()
+    for name in ("em", "ddim_eta"):
+        with pytest.raises(ValueError, match="PRNG key"):
+            sample(make_plan(name, SDE, TS, **_kw(name)), eps, xT)
+
+
+# ------------------------------------------------------------------- hooks
+def test_trajectory_hook():
+    eps, xT = _problem()
+    plan = make_plan("tab2", SDE, TS)
+    x0, traj = sample(plan, eps, xT, hooks=Hooks(record_trajectory=True))
+    assert traj.shape == (plan.n_steps,) + xT.shape
+    np.testing.assert_array_equal(np.asarray(traj[-1]), np.asarray(x0))
+    np.testing.assert_array_equal(np.asarray(x0),
+                                  np.asarray(sample(plan, eps, xT)))
+
+
+def test_guidance_hook_scales_eps():
+    """eps_transform is applied to every network output (identity == no-op;
+    a scaling transform must change the result)."""
+    eps, xT = _problem()
+    plan = make_plan("tab2", SDE, TS)
+    base = sample(plan, eps, xT)
+    same = sample(plan, eps, xT, hooks=Hooks(eps_transform=lambda x, t, e: e))
+    np.testing.assert_array_equal(np.asarray(base), np.asarray(same))
+    scaled = sample(plan, eps, xT,
+                    hooks=Hooks(eps_transform=lambda x, t, e: 1.5 * e))
+    assert not np.allclose(np.asarray(base), np.asarray(scaled))
+
+
+# ------------------------------------------------------- jit / vmap / cache
+def test_jit_shares_executor_across_same_signature_plans():
+    """Plans are traced arguments: solver names with equal plan signatures
+    (ddim / euler / naive_ei at one NFE) share a single compiled executor."""
+    eps, xT = _problem()
+    run = jax.jit(lambda p, x: sample(p, eps, x))
+    outs = [run(make_plan(n, SDE, TS), xT) for n in ("ddim", "euler", "naive_ei")]
+    assert run._cache_size() == 1
+    # and they are *different* solvers, not one trace constant-folded
+    assert not np.allclose(np.asarray(outs[0]), np.asarray(outs[1]))
+
+
+def test_vmap_over_batched_state():
+    eps, xT = _problem(batch=6)
+    plan = make_plan("tab1", SDE, TS)
+    got = jax.vmap(lambda x: sample(plan, eps, x))(xT[:, None, :])[:, 0, :]
+    want = sample(plan, eps, xT)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-10, atol=1e-12)
+
+
+# ------------------------------------------------------------- eta contract
+def test_make_solver_ddim_eta_requires_explicit_eta():
+    """The old factory silently defaulted to eta=1.0 while DDIMSolver
+    defaulted to eta=0.0; both factories now require eta explicitly."""
+    with pytest.raises(TypeError, match="eta"):
+        make_solver("ddim_eta", SDE, TS)
+    with pytest.raises(TypeError, match="eta"):
+        make_plan("ddim_eta", SDE, TS)
+
+
+def test_ddim_eta_forwarded():
+    eps, xT = _problem()
+    det = make_solver("ddim_eta", SDE, TS, eta=0.0).sample(eps, xT)
+    ddim = make_solver("ddim", SDE, TS).sample(eps, xT)
+    np.testing.assert_allclose(np.asarray(det), np.asarray(ddim),
+                               rtol=1e-9, atol=1e-9)
+    sto = make_solver("ddim_eta", SDE, TS, eta=1.0)
+    assert sto.plan.stochastic and sto.eta == 1.0
+    assert not np.allclose(
+        np.asarray(sto.sample(eps, xT, KEY)), np.asarray(ddim))
+
+
+def test_plan_nfe_accounting():
+    assert make_plan("pndm", SDE, get_timesteps(SDE, 20, "uniform")).nfe == 29
+    assert make_plan("ipndm3", SDE, TS).nfe == 8
+    assert make_plan("rho_heun", SDE, TS).nfe == 16
+    assert make_plan("rho_rk4", SDE, TS).nfe == 32

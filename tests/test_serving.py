@@ -53,3 +53,44 @@ def test_diffusion_engine_nfe_accounting():
     eng = DiffusionServeEngine(params, cfg)
     res = eng.serve([Request(uid=0, seq_len=8, nfe=6, solver="ddim")])
     assert res[0].nfe == 6
+
+
+def test_diffusion_engine_shares_executor_across_solver_names():
+    """Mixed-solver request groups: the compile cache is keyed on
+    (plan signature, batch, seq_len), so solver names whose plans share a
+    signature reuse ONE jitted executor instead of one per solver name."""
+    cfg = get_config("gemma_2b").reduced().with_(objective="diffusion")
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    eng = DiffusionServeEngine(params, cfg)
+
+    # 3 solver names, same plan signature (affine/"ab", C shape (N,1)), same
+    # (nfe, batch, seq_len) -> 3 groups, 1 executor
+    reqs = []
+    for j, solver in enumerate(["ddim", "euler", "naive_ei"]):
+        reqs += [Request(uid=10 * j + i, seq_len=16, nfe=4, solver=solver,
+                         seed=0) for i in range(2)]
+    res = eng.serve(reqs)
+    assert len(res) == 6
+    assert len(eng._plans) == 3
+    assert len(eng._compiled) == 1
+
+    # different coefficient shape (tab2: C is (N,3)) -> one more executor
+    eng.serve([Request(uid=90 + i, seq_len=16, nfe=4, solver="tab2", seed=0)
+               for i in range(2)])
+    assert len(eng._compiled) == 2
+
+    # stochastic pair (em / ddim_eta) shares one stochastic-affine executor
+    eng.serve([Request(uid=100 + i, seq_len=16, nfe=4, solver="em", seed=0)
+               for i in range(2)])
+    eng.serve([Request(uid=110 + i, seq_len=16, nfe=4, solver="ddim_eta",
+                       eta=1.0, seed=0) for i in range(2)])
+    assert len(eng._compiled) == 3
+
+    # results differ across solvers (shared executor, different plan data)
+    by_uid = {r.uid: r for r in res}
+    assert by_uid[0].tokens.shape == (16,)
+
+    # the explicit-eta contract reaches the serving layer too
+    import pytest
+    with pytest.raises(ValueError, match="eta"):
+        eng.serve([Request(uid=120, seq_len=16, nfe=4, solver="ddim_eta")])
