@@ -25,7 +25,8 @@ from .sde import SDE, VPSDE, VESDE, SubVPSDE, get_sde
 from .schedules import get_timesteps, SCHEDULES
 from .coeffs import ab_coefficients, ddim_coefficients_vp, naive_ei_coefficients, AB_WEIGHTS
 from .plan import (SolverPlan, make_plan, plan_ab, plan_rk, plan_ddim,
-                   plan_euler, plan_em, plan_ipndm, plan_pndm)
+                   plan_euler, plan_em, plan_ipndm, plan_pndm, solver_stages,
+                   stack_plans)
 from .sampler import Hooks, SamplerState, init_state, sample, step
 from .solvers import (ABSolver, RKSolver, DPMSolver2, EulerSolver, EMSolver,
                       DDIMSolver, IPNDMSolver, PNDMSolver, make_solver,
@@ -37,7 +38,8 @@ __all__ = [
     "get_timesteps", "SCHEDULES",
     "ab_coefficients", "ddim_coefficients_vp", "naive_ei_coefficients", "AB_WEIGHTS",
     "SolverPlan", "make_plan", "plan_ab", "plan_rk", "plan_ddim",
-    "plan_euler", "plan_em", "plan_ipndm", "plan_pndm",
+    "plan_euler", "plan_em", "plan_ipndm", "plan_pndm", "solver_stages",
+    "stack_plans",
     "Hooks", "SamplerState", "init_state", "sample", "step",
     "ABSolver", "RKSolver", "DPMSolver2", "EulerSolver", "EMSolver",
     "DDIMSolver", "IPNDMSolver", "PNDMSolver", "make_solver", "SOLVER_NAMES",

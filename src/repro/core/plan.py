@@ -64,16 +64,22 @@ class SolverPlan:
     stochastic: bool = dataclasses.field(default=False, metadata=dict(static=True))
     fused: bool = dataclasses.field(default=False, metadata=dict(static=True))
     nfe: int = dataclasses.field(default=0, metadata=dict(static=True))
+    stacked: bool = dataclasses.field(default=False, metadata=dict(static=True))
 
     @property
     def n_steps(self) -> int:
-        return self.ts.shape[0] - 1
+        return self.ts.shape[-1] - 1
+
+    @property
+    def batch(self) -> int:
+        """Leading request axis of a stacked plan (1 for unstacked plans)."""
+        return self.ts.shape[0] if self.stacked else 1
 
     @property
     def history_len(self) -> int:
         """Rows of eps history carried in ``SamplerState.hist``."""
         if self.method == "ab":
-            return self.coeffs["C"].shape[1]
+            return self.coeffs["C"].shape[-1]
         if self.method == "pndm":
             return 4
         return 0  # rk: stage evals live inside one step
@@ -84,7 +90,7 @@ class SolverPlan:
         of the sampled state) reuse one compiled executor."""
         leaves = tuple(sorted((k, tuple(v.shape), str(v.dtype))
                               for k, v in self.coeffs.items()))
-        return (self.method, self.stochastic, self.fused,
+        return (self.method, self.stochastic, self.fused, self.stacked,
                 tuple(self.ts.shape), leaves)
 
     def astype(self, dtype) -> "SolverPlan":
@@ -96,6 +102,39 @@ class SolverPlan:
         return dataclasses.replace(
             self, coeffs={k: cast(v) for k, v in self.coeffs.items()},
             ts=cast(self.ts))
+
+
+def stack_plans(plans) -> SolverPlan:
+    """Stack same-signature plans along a new leading *request* axis.
+
+    This is what lets a serving batch mix solver *names*: any plans whose
+    :attr:`SolverPlan.signature` matches (same step method, stochasticity and
+    coefficient shapes -- e.g. ddim / euler / naive_ei at one NFE, or
+    em / ddim_eta) become ONE stacked plan whose coefficient leaves carry a
+    leading ``(R, ...)`` axis. The executor applies row ``i`` of the stack to
+    row ``i`` of a batched ``SamplerState``, so one compiled ``step``/
+    ``sample`` serves a heterogeneous request group.
+
+    A stacked plan requires a batched state: ``x`` is ``(R, *inner)``, and
+    stochastic plans take per-request PRNG keys of shape ``(R, 2)``.
+    """
+    plans = list(plans)
+    if not plans:
+        raise ValueError("stack_plans requires at least one plan")
+    base = plans[0]
+    if base.stacked:
+        raise ValueError("cannot re-stack an already stacked plan")
+    for p in plans[1:]:
+        if p.signature != base.signature:
+            raise ValueError(
+                f"cannot stack plans with different signatures:\n  {base.signature}"
+                f"\n  {p.signature}")
+        if p.nfe != base.nfe:
+            raise ValueError("cannot stack plans with different NFE counts")
+    coeffs = {k: jnp.stack([p.coeffs[k] for p in plans])
+              for k in base.coeffs}
+    ts = jnp.stack([p.ts for p in plans])
+    return dataclasses.replace(base, coeffs=coeffs, ts=ts, stacked=True)
 
 
 def _mk(method: str, coeffs: dict, ts: np.ndarray, *, stochastic=False,
@@ -257,6 +296,19 @@ def plan_pndm(sde: SDE, ts) -> SolverPlan:
 
 
 # ---------------------------------------------------------------- factory
+def solver_stages(name: str) -> int:
+    """Network evaluations one grid interval costs for solver ``name`` (the
+    RK stage count; 1 for every single-eval-per-step family). Lives next to
+    the tableau registry so serving's NFE-budget grid sizing can never drift
+    from what ``make_plan`` actually builds."""
+    n = name.lower()
+    if n == "dpm2":
+        return len(_TABLEAUS["midpoint"][0])
+    if n.startswith("rho_") and n[4:] in _TABLEAUS:
+        return len(_TABLEAUS[n[4:]][0])
+    return 1
+
+
 def make_plan(name: str, sde: SDE, ts, **kw) -> SolverPlan:
     """Name-based factory mirroring ``make_solver``. Names: ddim, tab{0..3},
     rhoab{0..3}, rho_heun, rho_midpoint, rho_kutta3, rho_rk4, dpm2, euler,

@@ -14,13 +14,21 @@ Public API:
       per-step progress, and resume mid-solve: ``sample`` is exactly
       ``init_state`` + ``step`` iterated, so splitting a solve across calls
       reproduces the one-shot result (to machine epsilon -- XLA may fuse the
-      loop body differently than an eagerly dispatched step). (For ``pndm``
-      plans the step index must be a concrete int -- warmup and tail steps
-      differ structurally, as in the original algorithm.)
+      loop body differently than an eagerly dispatched step). ``k`` may be a
+      tracer for every method (pndm's structural warmup/tail split is a
+      ``lax.cond`` under a traced ``k``), so one jitted ``step`` serves all
+      step indices of a plan.
 
   ``init_state(plan, x_T, key=None)``
       Build the initial ``SamplerState``. Stochastic plans require a PRNG
       key; deterministic plans carry a dummy key untouched.
+
+Stacked plans (:func:`repro.core.plan.stack_plans`) batch *heterogeneous*
+requests: coefficient leaves carry a leading request axis ``R``, ``x`` is
+``(R, *inner)`` and ``state.key`` is a ``(R, 2)`` stack of per-request PRNG
+keys. Row ``i`` of a stacked solve draws exactly the noise a single-request
+solve under ``keys[i]`` would draw (vmapped key splits + per-row draws), which
+is what makes streamed serving per-request reproducible.
 
 Everything is a pytree in, pytree out -- ``jax.jit``/``vmap``/``pjit``
 compose over ``sample`` and ``step`` with the plan as a traced argument, so
@@ -78,7 +86,18 @@ _DEFAULT_HOOKS = Hooks()
 def init_state(plan: SolverPlan, x_T: Array, key: Optional[Array] = None) -> SamplerState:
     if plan.stochastic and key is None:
         raise ValueError(f"stochastic plan (method={plan.method!r}) requires a PRNG key")
-    if key is None:
+    if plan.stacked:
+        if x_T.ndim < 1 or x_T.shape[0] != plan.batch:
+            raise ValueError(f"stacked plan of {plan.batch} requests needs "
+                             f"x_T with leading axis {plan.batch}, got "
+                             f"{x_T.shape}")
+        if key is None:
+            key = jnp.zeros((plan.batch, 2), jnp.uint32)
+        if key.ndim != 2 or key.shape[0] != plan.batch:
+            raise ValueError(f"stacked plan of {plan.batch} requests needs "
+                             f"per-request keys of shape ({plan.batch}, 2), "
+                             f"got {key.shape}")
+    elif key is None:
         key = jax.random.PRNGKey(0)
     hist = jnp.zeros((plan.history_len,) + x_T.shape, x_T.dtype)
     return SamplerState(x=x_T, hist=hist, key=key, k=jnp.int32(0))
@@ -89,81 +108,155 @@ def _apply_eps(hooks: Hooks, x, t, eps):
     return eps if hooks.eps_transform is None else hooks.eps_transform(x, t, eps)
 
 
+def bcast(v, x):
+    """Broadcast a per-request coefficient vector (R,) against x (R, *inner).
+    No-op on scalars (unstacked plans). This is the stacked-plan broadcasting
+    contract; eps oracles that support per-request time vectors (e.g.
+    :class:`repro.diffusion.analytic.GaussianData`) share it."""
+    return v.reshape(v.shape + (1,) * (x.ndim - v.ndim)) if jnp.ndim(v) else v
+
+
+def _comb(w, hist, stacked: bool):
+    """History combination: sum_j w[j] hist[j] (unstacked, w: (H,)) or
+    per-request sum_j w[r, j] hist[j, r] (stacked, w: (R, H))."""
+    if stacked:
+        return jnp.einsum("rh,hr...->r...", w, hist)
+    return jnp.tensordot(w, hist, axes=1)
+
+
+def _split_keys(key, stacked: bool):
+    """split() that treats a (R, 2) leaf as R independent per-request keys."""
+    if stacked:
+        ks = jax.vmap(jax.random.split)(key)   # (R, 2, 2)
+        return ks[:, 0], ks[:, 1]
+    return jax.random.split(key)
+
+
+def _noise_like(sub, x, stacked: bool):
+    """Per-request draws match what a single-request solve under keys[r]
+    would draw: normal(keys[r], inner_shape) row by row."""
+    if stacked:
+        return jax.vmap(
+            lambda kk: jax.random.normal(kk, x.shape[1:], x.dtype))(sub)
+    return jax.random.normal(sub, x.shape, x.dtype)
+
+
 def _step_ab(plan: SolverPlan, k, state: SamplerState, eps_fn: EpsFn,
              hooks: Hooks) -> SamplerState:
-    c = plan.coeffs
+    c, stk = plan.coeffs, plan.stacked
     x, key = state.x, state.key
     if plan.stochastic:
-        key, sub = jax.random.split(key)
-    eps = _apply_eps(hooks, x, plan.ts[k], eps_fn(x, plan.ts[k]))
+        key, sub = _split_keys(key, stk)
+    t_k = plan.ts[:, k] if stk else plan.ts[k]
+    psi = c["psi"][:, k] if stk else c["psi"][k]
+    Cw = c["C"][:, k] if stk else c["C"][k]
+    eps = _apply_eps(hooks, x, t_k, eps_fn(x, t_k))
     hist = jnp.concatenate([eps[None], state.hist[:-1]], axis=0)
     if plan.fused:
+        if stk:
+            raise NotImplementedError("fused Pallas path does not support "
+                                      "stacked plans (per-request psi/C)")
         if _fused_deis_step is None:
             raise ImportError("plan.fused=True requires the Pallas deis_step "
                               "kernel, which failed to import"
                               ) from _FUSED_IMPORT_ERROR
         flat = x.reshape(-1, x.shape[-1]) if x.ndim > 1 else x.reshape(1, -1)
         hflat = hist.reshape(hist.shape[0], *flat.shape)
-        out = _fused_deis_step(flat, hflat, c["psi"][k].astype(jnp.float32),
-                               c["C"][k].astype(jnp.float32))
+        out = _fused_deis_step(flat, hflat, psi.astype(jnp.float32),
+                               Cw.astype(jnp.float32))
         x_new = out.reshape(x.shape)
     else:
-        x_new = c["psi"][k] * x + jnp.tensordot(c["C"][k], hist, axes=1)
+        x_new = bcast(psi, x) * x + _comb(Cw, hist, stk)
     if plan.stochastic:
-        xi = jax.random.normal(sub, x.shape, x.dtype)
-        x_new = x_new + c["s"][k] * xi
+        s = c["s"][:, k] if stk else c["s"][k]
+        x_new = x_new + bcast(s, x) * _noise_like(sub, x, stk)
     return SamplerState(x=x_new, hist=hist, key=key, k=state.k + 1)
 
 
 def _step_rk(plan: SolverPlan, k, state: SamplerState, eps_fn: EpsFn,
              hooks: Hooks) -> SamplerState:
-    c = plan.coeffs
+    c, stk = plan.coeffs, plan.stacked
     x = state.x
-    n_stages = c["b"].shape[0]
-    h = c["h"][k]
-    y = x / c["mu"][k]
+    n_stages = c["b"].shape[-1]
+    h = c["h"][:, k] if stk else c["h"][k]
+    mu = (lambda j: c["mu"][:, j]) if stk else (lambda j: c["mu"][j])
+    y = x / bcast(mu(k), x)
     ks = jnp.zeros((n_stages,) + x.shape, x.dtype)
     for i in range(n_stages):  # static unroll over stages
-        y_i = y + h * jnp.tensordot(c["A"][k, i], ks, axes=1)
-        x_i = c["stage_mu"][k, i] * y_i
-        k_i = _apply_eps(hooks, x_i, c["stage_t"][k, i],
-                         eps_fn(x_i, c["stage_t"][k, i]))
+        A_ki = c["A"][:, k, i] if stk else c["A"][k, i]
+        y_i = y + bcast(h, x) * _comb(A_ki, ks, stk)
+        st_mu = c["stage_mu"][:, k, i] if stk else c["stage_mu"][k, i]
+        st_t = c["stage_t"][:, k, i] if stk else c["stage_t"][k, i]
+        x_i = bcast(st_mu, x) * y_i
+        k_i = _apply_eps(hooks, x_i, st_t, eps_fn(x_i, st_t))
         ks = ks.at[i].set(k_i)
-    y = y + h * jnp.tensordot(c["b"], ks, axes=1)
-    return SamplerState(x=c["mu"][k + 1] * y, hist=state.hist, key=state.key,
-                        k=state.k + 1)
+    y = y + bcast(h, x) * _comb(c["b"], ks, stk)
+    return SamplerState(x=bcast(mu(k + 1), x) * y, hist=state.hist,
+                        key=state.key, k=state.k + 1)
 
 
 _N_WARMUP = 3  # PNDM pseudo-RK4 warmup steps
 
 
-def _step_pndm(plan: SolverPlan, k: int, state: SamplerState, eps_fn: EpsFn,
+def _pndm_warmup(plan: SolverPlan, k, state: SamplerState, eps_fn: EpsFn,
+                 hooks: Hooks) -> SamplerState:
+    """Pseudo-RK4 warmup step (4 NFE). ``k`` may be traced; warm-coefficient
+    indices are clamped so the trace stays valid for any k (the tail branch
+    of the traced `lax.cond` never executes this at k >= _N_WARMUP)."""
+    c, stk = plan.coeffs, plan.stacked
+    x = state.x
+    kw = jnp.minimum(k, _N_WARMUP - 1) if isinstance(k, jax.core.Tracer) else k
+    if stk:
+        t_c, t_m, t_n = plan.ts[:, k], c["warm_t_mid"][:, kw], plan.ts[:, k + 1]
+        rm, cm = c["warm_ratio_m"][:, kw], c["warm_coef_m"][:, kw]
+        rn, cn = c["warm_ratio_n"][:, kw], c["warm_coef_n"][:, kw]
+    else:
+        t_c, t_m, t_n = plan.ts[k], c["warm_t_mid"][kw], plan.ts[k + 1]
+        rm, cm = c["warm_ratio_m"][kw], c["warm_coef_m"][kw]
+        rn, cn = c["warm_ratio_n"][kw], c["warm_coef_n"][kw]
+    rm, cm = bcast(rm, x), bcast(cm, x)
+    rn, cn = bcast(rn, x), bcast(cn, x)
+    e1 = _apply_eps(hooks, x, t_c, eps_fn(x, t_c))
+    x1 = rm * x + cm * e1
+    e2 = _apply_eps(hooks, x1, t_m, eps_fn(x1, t_m))
+    x2 = rm * x + cm * e2
+    e3 = _apply_eps(hooks, x2, t_m, eps_fn(x2, t_m))
+    x3 = rn * x + cn * e3
+    e4 = _apply_eps(hooks, x3, t_n, eps_fn(x3, t_n))
+    e_prime = (e1 + 2 * e2 + 2 * e3 + e4) / 6.0
+    x_new = rn * x + cn * e_prime
+    hist = jnp.concatenate([e1[None], state.hist[:-1]], axis=0)
+    return SamplerState(x=x_new, hist=hist, key=state.key, k=state.k + 1)
+
+
+def _pndm_tail(plan: SolverPlan, k, state: SamplerState, eps_fn: EpsFn,
+               hooks: Hooks) -> SamplerState:
+    c, stk = plan.coeffs, plan.stacked
+    x = state.x
+    t_k = plan.ts[:, k] if stk else plan.ts[k]
+    psi = c["psi"][:, k] if stk else c["psi"][k]
+    Cw = c["C"][:, k] if stk else c["C"][k]
+    e = _apply_eps(hooks, x, t_k, eps_fn(x, t_k))
+    hist = jnp.concatenate([e[None], state.hist[:-1]], axis=0)
+    x_new = bcast(psi, x) * x + _comb(Cw, hist, stk)
+    return SamplerState(x=x_new, hist=hist, key=state.key, k=state.k + 1)
+
+
+def _step_pndm(plan: SolverPlan, k, state: SamplerState, eps_fn: EpsFn,
                hooks: Hooks) -> SamplerState:
     if isinstance(k, jax.core.Tracer):
-        raise TypeError("pndm steps differ structurally between warmup and "
-                        "tail; `k` must be a concrete int (python loop)")
+        # warmup and tail differ structurally (4 vs 1 net evals); under a
+        # traced k both are staged and `lax.cond` executes only the taken
+        # branch -- this is what lets serving jit ONE step for all k.
+        return jax.lax.cond(
+            k < _N_WARMUP,
+            lambda st: _pndm_warmup(plan, k, st, eps_fn, hooks),
+            lambda st: _pndm_tail(plan, k, st, eps_fn, hooks),
+            state)
     k = int(k)
-    c = plan.coeffs
-    x = state.x
     if k < _N_WARMUP:
-        t_c, t_m, t_n = plan.ts[k], c["warm_t_mid"][k], plan.ts[k + 1]
-        rm, cm = c["warm_ratio_m"][k], c["warm_coef_m"][k]
-        rn, cn = c["warm_ratio_n"][k], c["warm_coef_n"][k]
-        e1 = _apply_eps(hooks, x, t_c, eps_fn(x, t_c))
-        x1 = rm * x + cm * e1
-        e2 = _apply_eps(hooks, x1, t_m, eps_fn(x1, t_m))
-        x2 = rm * x + cm * e2
-        e3 = _apply_eps(hooks, x2, t_m, eps_fn(x2, t_m))
-        x3 = rn * x + cn * e3
-        e4 = _apply_eps(hooks, x3, t_n, eps_fn(x3, t_n))
-        e_prime = (e1 + 2 * e2 + 2 * e3 + e4) / 6.0
-        x_new = rn * x + cn * e_prime
-        hist = jnp.concatenate([e1[None], state.hist[:-1]], axis=0)
-    else:
-        e = _apply_eps(hooks, x, plan.ts[k], eps_fn(x, plan.ts[k]))
-        hist = jnp.concatenate([e[None], state.hist[:-1]], axis=0)
-        x_new = c["psi"][k] * x + jnp.tensordot(c["C"][k], hist, axes=1)
-    return SamplerState(x=x_new, hist=hist, key=state.key, k=state.k + 1)
+        return _pndm_warmup(plan, k, state, eps_fn, hooks)
+    return _pndm_tail(plan, k, state, eps_fn, hooks)
 
 
 _STEPPERS = {"ab": _step_ab, "rk": _step_rk, "pndm": _step_pndm}

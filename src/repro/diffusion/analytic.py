@@ -19,12 +19,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core.sampler import bcast as _per_request
 from ..core.sde import SDE
 
 
 @dataclasses.dataclass
 class GaussianData:
-    """Data ~ N(mean, diag(var)). Exact eps and exact PF-ODE flow."""
+    """Data ~ N(mean, diag(var)). Exact eps and exact PF-ODE flow.
+
+    ``eps_fn`` accepts a scalar ``t`` or a per-request vector ``t: (R,)``
+    paired with ``x: (R, *inner)`` (the stacked-plan executor contract).
+    """
 
     sde: SDE
     mean: np.ndarray
@@ -36,7 +41,8 @@ class GaussianData:
         v = jnp.asarray(self.var)
 
         def eps(x, t):
-            mu, sig = sde.mu(t), sde.sigma(t)
+            mu = _per_request(sde.mu(t), x)
+            sig = _per_request(sde.sigma(t), x)
             marg_var = mu ** 2 * v + sig ** 2
             score = -(x - mu * m) / marg_var
             return -sig * score

@@ -84,6 +84,16 @@ def make_eps_fn(params, cfg: ModelConfig, *, prefix=None, frames=None,
     return eps_fn
 
 
+def decode_tokens(params, cfg: ModelConfig, x0):
+    """Round solved embeddings ``x0`` to tokens through the LM head.
+
+    Shared by the one-shot sampler and the streaming serving engine (which
+    decodes per-step partial states for streamed progress)."""
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = (x0 / X0_SCALE) @ head.astype(jnp.float32)
+    return jnp.argmax(logits, -1)
+
+
 def sample_tokens(params, cfg: ModelConfig, plan: SolverPlan | SolverBase, key,
                   *, batch: int, seq_len: int, prior_std: float | None = None,
                   prefix=None, frames=None, use_pallas: bool = False,
@@ -110,6 +120,49 @@ def sample_tokens(params, cfg: ModelConfig, plan: SolverPlan | SolverBase, key,
     x_T = jax.random.normal(k_prior, (batch, seq_len, cfg.d_model), jnp.float32) \
         * prior_std
     x0 = SAMPLER.sample(plan, eps_fn, x_T, k_solve, hooks=hooks)
-    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
-    logits = (x0 / X0_SCALE) @ head.astype(jnp.float32)
-    return jnp.argmax(logits, -1), x0
+    return decode_tokens(params, cfg, x0), x0
+
+
+# ----------------------------------------------- per-request-keyed streaming
+def request_keys(seeds) -> jax.Array:
+    """Stack per-request PRNG keys derived from each request's own seed.
+
+    This is the per-request reproducibility contract: request ``i`` of a
+    batch draws its prior and its solve noise from ``PRNGKey(seeds[i])``
+    alone, so its sample is independent of which batch it landed in.
+    """
+    return jnp.stack([jax.random.PRNGKey(int(s)) for s in seeds])
+
+
+def init_sample_state(cfg: ModelConfig, plan: SolverPlan, keys, *,
+                      seq_len: int, prior_std: float):
+    """Build the stacked ``SamplerState`` for a group of requests.
+
+    ``plan`` must be a stacked plan (:func:`repro.core.plan.stack_plans`) and
+    ``keys`` a ``(R, 2)`` stack from :func:`request_keys`. Each request's key
+    is split into (prior, solve) exactly as the one-shot path splits its
+    single key; the prior is drawn per request with shape ``(seq_len,
+    d_model)`` so row ``i`` is bit-identical to a single-request solve.
+    """
+    split = jax.vmap(jax.random.split)(keys)          # (R, 2, 2)
+    k_prior, k_solve = split[:, 0], split[:, 1]
+    x_T = jax.vmap(
+        lambda kk: jax.random.normal(kk, (seq_len, cfg.d_model), jnp.float32)
+    )(k_prior) * prior_std
+    return SAMPLER.init_state(plan, x_T, k_solve)
+
+
+def sample_tokens_stream(params, cfg: ModelConfig, plan: SolverPlan, keys, *,
+                         seq_len: int, prior_std: float, hooks=None):
+    """One-shot solve of a stacked per-request-keyed group. Returns
+    (tokens, x0).
+
+    This is the reference the streaming engine must reproduce: running the
+    same stacked plan step-by-step (interleaved with other groups) yields the
+    same per-request samples, because each row's noise comes only from its
+    own key chain."""
+    eps_fn = make_eps_fn(params, cfg)
+    state = init_sample_state(cfg, plan, keys, seq_len=seq_len,
+                              prior_std=prior_std)
+    x0 = SAMPLER.sample(plan, eps_fn, state.x, state.key, hooks=hooks)
+    return decode_tokens(params, cfg, x0), x0

@@ -44,10 +44,12 @@ def main():
         eng = DiffusionServeEngine(params, cfg)
         reqs = [Request(uid=i, seq_len=args.seq_len, nfe=args.nfe,
                         solver=args.solver, seed=i) for i in range(args.requests)]
-        results = eng.serve(reqs)
+        results = eng.serve(
+            reqs, on_step=lambda e: print(
+                f"  step {e.k}/{e.n_steps} for uids {e.uids}"))
         for r in results[:4]:
-            print(f"req {r.uid}: nfe={r.nfe} latency={r.latency_s:.2f}s "
-                  f"tokens[:10]={r.tokens[:10]}")
+            print(f"req {r.uid}: nfe={r.nfe} solve={r.latency_s:.2f}s "
+                  f"compile={r.compile_s:.2f}s tokens[:10]={r.tokens[:10]}")
         print(f"served {len(results)} requests")
     else:
         eng = ARServeEngine(params, cfg, max_len=args.seq_len + args.max_new)

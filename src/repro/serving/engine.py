@@ -2,19 +2,51 @@
 
 ARServeEngine      : classic prefill + KV-cache decode loop over a request
                      queue (continuous slot-based batching).
-DiffusionServeEngine: the paper's workload -- batched DEIS sampling requests.
-                     Requests asking for the same (solver, NFE, seq_len) are
-                     batched into one embedding-space ODE solve; each NFE is
-                     one full-sequence backbone forward. This is where DEIS's
-                     small-NFE advantage becomes throughput: serving capacity
-                     scales ~1/NFE.
+DiffusionServeEngine: the paper's workload as a *streaming continuous-batching*
+                     service over the pure ``step()`` executor.
+
+Diffusion serving semantics
+---------------------------
+
+Admission.  ``submit()`` enqueues; at every scheduler ``tick()`` pending
+requests are admitted into *groups* at a step boundary. A group stacks up to
+``max_group`` requests whose plans share one :attr:`SolverPlan.signature` and
+whose ``seq_len`` matches -- solver *names* may differ (ddim / euler /
+naive_ei at one NFE stack into a single solve via
+:func:`repro.core.plan.stack_plans`). Each request gets its own PRNG key
+derived from its own ``Request.seed``, so samples are per-request
+reproducible regardless of batch composition or admission time. Requests
+never join a group mid-solve; they form a new group that is interleaved with
+the groups already in flight.
+
+Scheduling.  A tick advances every active group by ONE solver step
+(round-robin at NFE granularity), so a newly admitted 5-NFE request starts
+making progress immediately instead of waiting behind a 50-NFE group.
+Finished groups are rounded to tokens and their ``Result``s emitted from the
+same tick.
+
+Compile cache.  One jitted ``step`` is AOT-compiled per
+``(plan.signature, batch, seq_len)`` and reused across groups, solver names
+and step indices (``k`` is a traced argument; pndm's warmup/tail split is a
+``lax.cond``). ``Result.compile_s`` carries the trace+compile cost charged to
+the first group that needed the executor; ``Result.latency_s`` is pure solve
+wall-time, so benchmark numbers are not poisoned by trace cost.
+
+Callback contract.  ``serve(..., on_step=fn)`` invokes ``fn(StepEvent)``
+after every group step with the group's uids and progress; with
+``stream_decode=True`` the event also carries the partial decode of the
+current iterate (streamed tokens). The callback runs on the scheduler thread
+between steps -- keep it cheap or copy the event out.
+
+Each NFE is one full-sequence backbone forward, so this is where DEIS's
+small-NFE advantage becomes throughput: serving capacity scales ~1/NFE.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from collections import defaultdict
-from typing import Optional
+from collections import deque
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -22,7 +54,8 @@ import numpy as np
 
 from ..configs.base import ModelConfig
 from ..core import get_timesteps, make_plan
-from ..core.plan import SolverPlan
+from ..core import sampler as SAMPLER
+from ..core.plan import SolverPlan, solver_stages, stack_plans
 from ..core.sde import SDE, VPSDE
 from ..diffusion import lm as DLM
 from ..models import transformer as T
@@ -45,8 +78,21 @@ class Request:
 class Result:
     uid: int
     tokens: np.ndarray
-    latency_s: float
-    nfe: int = 0
+    latency_s: float            # solve wall-time of the request's group,
+                                # EXCLUDING compile/trace (see compile_s)
+    nfe: int = 0                # true network evals spent (plan.nfe)
+    compile_s: float = 0.0      # trace+compile charged to this group's
+                                # executor; 0.0 on a warm compile cache
+
+
+@dataclasses.dataclass
+class StepEvent:
+    """Per-step progress emitted to the ``on_step`` serving callback."""
+    uids: tuple                      # requests in the group that just stepped
+    k: int                           # steps completed (1-based after the step)
+    n_steps: int                     # total solver steps for this group
+    tokens: Optional[np.ndarray] = None  # (R, seq_len) partial decode when
+                                         # serve(stream_decode=True)
 
 
 class ARServeEngine:
@@ -97,68 +143,189 @@ class ARServeEngine:
         return results
 
 
-class DiffusionServeEngine:
-    """Batched DEIS sampling service (the paper's technique as a server).
+# The request's NFE *budget* is honored by sizing the grid as
+# max(1, nfe // solver_stages(name)) instead of burning n_steps * stages
+# evals (a Request(nfe=10, solver="rho_rk4") used to cost 40 evals). pndm
+# spends 3 extra evals on each of its 3 warmup steps, so its grid is nfe - 9
+# intervals (floored at the 4 steps PNDM requires).
+_PNDM_WARMUP_EXTRA = 9
 
-    Plans are data, not code: each (solver, nfe) pair builds one immutable
-    ``SolverPlan`` (cached host-side), and the jitted executor takes the plan
-    as a *traced* pytree argument. The compile cache is therefore keyed on
-    ``(plan.signature, batch, seq_len)`` -- every solver name whose plan has
-    the same step method and coefficient shapes (e.g. ddim / euler /
-    naive_ei at equal NFE, or em / ddim_eta, or ipndm-r / tab-r) reuses one
-    compiled executor instead of exploding the jit cache across all 20
-    solver names x NFE settings.
+
+@dataclasses.dataclass
+class _Group:
+    """One in-flight stacked solve (requests admitted together)."""
+    reqs: list
+    plan: SolverPlan            # stacked: leading request axis on all leaves
+    state: SAMPLER.SamplerState
+    fn: Callable                # AOT-compiled step(params, plan, k, state)
+    n_steps: int
+    compile_s: float            # 0.0 when the executor cache was warm
+    k: int = 0                  # steps completed
+    solve_s: float = 0.0        # accumulated solve wall-time (excl. compile)
+
+
+class DiffusionServeEngine:
+    """Streaming continuous-batching DEIS sampling service.
+
+    See the module docstring for the admission / scheduling / compile-cache /
+    callback contracts. ``serve`` drains a request list to completion;
+    ``submit`` + ``tick`` expose the scheduler directly so callers (and
+    tests) can admit requests while other groups are mid-solve.
     """
 
     def __init__(self, params, cfg: ModelConfig, sde: Optional[SDE] = None,
-                 schedule: str = "quadratic"):
+                 schedule: str = "quadratic", max_group: int = 8):
         assert cfg.objective == "diffusion"
         self.params, self.cfg = params, cfg
         self.sde = sde or VPSDE()
         self.schedule = schedule
+        self.max_group = max_group
         self._plans: dict = {}      # (solver, nfe, eta) -> SolverPlan
-        self._compiled: dict = {}   # (plan.signature, batch, seq_len) -> jitted fn
+        self._compiled: dict = {}   # (plan.signature, batch, seq_len) -> AOT step
+        self._pending: deque = deque()   # (Request, SolverPlan) awaiting admission
+        self._active: list[_Group] = []
 
+    # ------------------------------------------------------------- plans
     def _plan(self, solver: str, nfe: int, eta: float | None) -> SolverPlan:
         if solver == "ddim_eta" and eta is None:
             raise ValueError("Request(solver='ddim_eta') requires an explicit "
                              "eta= (eta=0 deterministic, eta=1 ancestral)")
         key_ = (solver, nfe, eta)
         if key_ not in self._plans:
-            ts = get_timesteps(self.sde, nfe, self.schedule)
+            if solver.lower() == "pndm":
+                n_grid = max(4, nfe - _PNDM_WARMUP_EXTRA)
+            else:
+                n_grid = max(1, nfe // solver_stages(solver))
+            ts = get_timesteps(self.sde, n_grid, self.schedule)
             kw = {"eta": eta} if solver == "ddim_eta" else {}
             self._plans[key_] = make_plan(solver, self.sde, ts, **kw)
         return self._plans[key_]
 
-    def _executor(self, plan: SolverPlan, batch: int, seq_len: int):
-        key_ = (plan.signature, batch, seq_len)
-        if key_ not in self._compiled:
-            prior_std = self.sde.prior_std()
+    # --------------------------------------------------------- executors
+    def _executor(self, sig, plan: SolverPlan, state) -> tuple[Callable, float]:
+        """AOT-compiled single step for this (signature, batch, seq_len).
 
-            def run(params, plan_arg, rng):
-                return DLM.sample_tokens(params, self.cfg, plan_arg, rng,
-                                         batch=batch, seq_len=seq_len,
-                                         prior_std=prior_std)[0]
+        ``k`` is a traced argument, so ONE trace serves every step index of
+        every group with this cache key; compiling ahead of time (instead of
+        on first call) is what lets compile cost be measured apart from
+        solve time."""
+        key_ = (sig, state.x.shape[0], state.x.shape[1])
+        if key_ in self._compiled:
+            return self._compiled[key_], 0.0
+        cfg = self.cfg
 
-            self._compiled[key_] = jax.jit(run)
-        return self._compiled[key_]
+        def run(params, plan_arg, k, st):
+            return SAMPLER.step(plan_arg, k, st, DLM.make_eps_fn(params, cfg))
 
-    def serve(self, requests: list[Request]) -> list[Result]:
-        """Group by (solver, nfe, seq_len[, eta]) and run one batched solve each."""
-        groups = defaultdict(list)
-        for r in requests:
-            # eta only distinguishes ddim_eta plans; don't split batchable
-            # groups of other solvers on an ignored field
-            eta = r.eta if r.solver == "ddim_eta" else None
-            groups[(r.solver, r.nfe, r.seq_len, eta)].append(r)
-        results = []
-        for (solver, nfe, seq_len, eta), reqs in groups.items():
-            t0 = time.time()
-            plan = self._plan(solver, nfe, eta)
-            fn = self._executor(plan, len(reqs), seq_len)
-            rng = jax.random.PRNGKey(reqs[0].seed)
-            toks = np.asarray(fn(self.params, plan, rng))
-            dt = time.time() - t0
-            for i, r in enumerate(reqs):
-                results.append(Result(r.uid, toks[i], dt, nfe=plan.nfe))
+        t0 = time.perf_counter()
+        compiled = jax.jit(run).lower(self.params, plan, jnp.int32(0),
+                                      state).compile()
+        compile_s = time.perf_counter() - t0
+        self._compiled[key_] = compiled
+        return compiled, compile_s
+
+    # -------------------------------------------------------- scheduling
+    def submit(self, request: Request) -> None:
+        """Validate and enqueue; the request is admitted into a group at the
+        next tick. Validation (unknown solver, ddim_eta without eta) raises
+        HERE, before the request enters the queue, so a bad request can never
+        strand already-queued work mid-admission."""
+        plan = self._plan(request.solver, request.nfe,
+                          request.eta if request.solver == "ddim_eta" else None)
+        self._pending.append((request, plan))
+
+    def _admit(self) -> None:
+        """Form new groups from everything pending (step-boundary admission).
+
+        Bucketing is by (plan signature, seq_len): any mix of solver names
+        whose plans stack is one solve. Buckets larger than ``max_group``
+        split into multiple groups."""
+        if not self._pending:
+            return
+        buckets: dict = {}
+        while self._pending:
+            r, plan = self._pending.popleft()
+            buckets.setdefault((plan.signature, r.seq_len),
+                               []).append((r, plan))
+        for (sig, seq_len), items in buckets.items():
+            for i in range(0, len(items), self.max_group):
+                chunk = items[i:i + self.max_group]
+                reqs = [r for r, _ in chunk]
+                plan = stack_plans([p for _, p in chunk])
+                keys = DLM.request_keys([r.seed for r in reqs])
+                state = DLM.init_sample_state(
+                    self.cfg, plan, keys, seq_len=seq_len,
+                    prior_std=self.sde.prior_std())
+                fn, compile_s = self._executor(sig, plan, state)
+                self._active.append(_Group(
+                    reqs=reqs, plan=plan, state=state, fn=fn,
+                    n_steps=plan.n_steps, compile_s=compile_s))
+
+    @property
+    def busy(self) -> bool:
+        """True while any request is pending admission or mid-solve."""
+        return bool(self._pending or self._active)
+
+    @property
+    def num_executors(self) -> int:
+        """Compiled executors alive -- one per (plan.signature, batch,
+        seq_len); growth during steady-state traffic means recompilation."""
+        return len(self._compiled)
+
+    def tick(self, *, on_step=None, stream_decode: bool = False) -> list[Result]:
+        """One scheduler tick: admit pending requests, advance every active
+        group one solver step, emit Results for groups that finished.
+
+        All group steps are dispatched before any is blocked on, so on async
+        backends the device overlaps them; each group's ``solve_s`` is the
+        elapsed time from its dispatch to its step being ready (what a client
+        of that group observes)."""
+        self._admit()
+        finished: list[Result] = []
+        dispatched = []
+        for g in list(self._active):
+            t0 = time.perf_counter()
+            g.state = g.fn(self.params, g.plan, jnp.int32(g.k), g.state)
+            dispatched.append((g, t0))
+        for g, t0 in dispatched:
+            jax.block_until_ready(g.state.x)
+            g.solve_s += time.perf_counter() - t0
+            g.k += 1
+            if on_step is not None:
+                toks = None
+                if stream_decode:
+                    toks = np.asarray(DLM.decode_tokens(self.params, self.cfg,
+                                                        g.state.x))
+                on_step(StepEvent(uids=tuple(r.uid for r in g.reqs), k=g.k,
+                                  n_steps=g.n_steps, tokens=toks))
+            if g.k >= g.n_steps:
+                self._active.remove(g)
+                toks = np.asarray(DLM.decode_tokens(self.params, self.cfg,
+                                                    g.state.x))
+                for i, r in enumerate(g.reqs):
+                    finished.append(Result(r.uid, toks[i], g.solve_s,
+                                           nfe=g.plan.nfe,
+                                           compile_s=g.compile_s))
+        return finished
+
+    def serve(self, requests: list[Request], *, on_step=None,
+              stream_decode: bool = False) -> list[Result]:
+        """Submit ``requests`` and run the scheduler until all solves finish.
+
+        More requests may be ``submit()``-ed (e.g. from ``on_step``) while
+        this drains; they are admitted at the next step boundary.
+
+        Validation is all-or-nothing for this call: if any request is
+        invalid, none of this call's requests stay queued."""
+        n0 = len(self._pending)
+        try:
+            for r in requests:
+                self.submit(r)
+        except Exception:
+            while len(self._pending) > n0:
+                self._pending.pop()
+            raise
+        results: list[Result] = []
+        while self.busy:
+            results += self.tick(on_step=on_step, stream_decode=stream_decode)
         return results

@@ -14,6 +14,8 @@ from repro.models import transformer as T
 from repro.training.optimizer import AdamW, constant_schedule
 from repro.training.steps import make_train_step, make_prefill_step, make_decode_step
 
+pytestmark = pytest.mark.slow  # model-zoo sweep: one forward + train step per architecture
+
 ARCHS = [a for a in ARCH_IDS if a != "cifar10_scorenet"]
 
 

@@ -57,6 +57,7 @@ def test_frontend_stubs():
     assert p.resolved_head_dim == 256  # gemma-style
 
 
+@pytest.mark.slow  # instantiates full-size (non-reduced) model params
 def test_param_counts_roughly_match_names():
     """Sanity: total parameter counts land near the advertised sizes."""
     import jax

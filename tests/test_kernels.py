@@ -7,6 +7,8 @@ from hypothesis import given, settings, strategies as st
 
 from repro.kernels import ops, ref
 
+pytestmark = pytest.mark.slow  # Pallas kernel sweeps in interpret mode
+
 
 def _tol(dtype):
     return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else \

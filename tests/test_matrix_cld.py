@@ -8,6 +8,8 @@ import pytest
 from repro.core.matrix_sde import (CLD, CLDGaussianOracle, cld_ab_coefficients,
                                    cld_reference, cld_sample)
 
+pytestmark = pytest.mark.slow  # CLD reference solves (~100s module fixture)
+
 
 @pytest.fixture(scope="module")
 def cld():

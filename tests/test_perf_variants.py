@@ -12,6 +12,8 @@ from repro.models import layers as L
 from repro.models import transformer as T
 from repro.training.steps import cross_entropy
 
+pytestmark = pytest.mark.slow  # perf-lever equivalence sweeps over full models
+
 
 @pytest.mark.parametrize("cap_factor", [100.0, 1.0])
 def test_moe_gather_matches_einsum_dispatch(cap_factor):

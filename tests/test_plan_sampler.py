@@ -7,7 +7,8 @@ import numpy as np
 import pytest
 
 from repro.core import (VPSDE, Hooks, SOLVER_NAMES, get_timesteps, init_state,
-                        make_plan, make_solver, plan_ddim, sample, step)
+                        make_plan, make_solver, plan_ddim, sample, stack_plans,
+                        step)
 from repro.diffusion.analytic import GaussianData
 
 SDE = VPSDE()
@@ -180,6 +181,108 @@ def test_ddim_eta_forwarded():
     assert sto.plan.stochastic and sto.eta == 1.0
     assert not np.allclose(
         np.asarray(sto.sample(eps, xT, KEY)), np.asarray(ddim))
+
+
+# ------------------------------------------------------------ stacked plans
+def _per_request_keys(seeds):
+    return jnp.stack([jax.random.PRNGKey(s) for s in seeds])
+
+
+@pytest.mark.parametrize("names,keys", [
+    (("ddim", "euler", "naive_ei"), None),       # mixed deterministic names
+    (("tab2", "tab2", "tab2"), None),            # homogeneous multistep
+    (("rho_rk4", "rho_rk4", "rho_rk4"), None),   # homogeneous RK
+    (("rho_heun", "dpm2", "rho_midpoint"), None),  # mixed RK tableaus
+    (("em", "ddim_eta", "em"), (11, 12, 13)),    # mixed stochastic
+])
+def test_stacked_rows_bitwise_match_single_request_solves(names, keys):
+    """Row i of a stacked solve is bit-identical to solving request i alone
+    (same key chain, same draws) -- the per-request reproducibility contract
+    streamed serving is built on.
+
+    One carve-out: mixed RK tableaus give each row *different* stage times,
+    and CPU SIMD transcendentals (exp in sde.mu) may differ by 1 ulp between
+    packet lanes and the scalar remainder path depending on vector length.
+    That case asserts <= 1 ulp instead of bit equality."""
+    eps, xT = _problem(batch=len(names))
+    plans = [make_plan(n, SDE, TS, **_kw(n)) for n in names]
+    kstack = _per_request_keys(keys) if keys else None
+    out = sample(stack_plans(plans), eps, xT, kstack)
+    mixed_t_rows = plans[0].method == "rk" and len(
+        {np.asarray(p.coeffs["stage_t"]).tobytes() for p in plans}) > 1
+    for i, p in enumerate(plans):
+        solo = sample(stack_plans([p]), eps, xT[i:i + 1],
+                      kstack[i:i + 1] if keys else None)
+        if mixed_t_rows:
+            np.testing.assert_allclose(np.asarray(solo[0]), np.asarray(out[i]),
+                                       rtol=1e-15, atol=0)
+        else:
+            np.testing.assert_array_equal(np.asarray(solo[0]),
+                                          np.asarray(out[i]))
+
+
+def test_interleaved_stacked_step_groups_match_one_shot_sample():
+    """The streaming schedule: two groups admitted at different step
+    boundaries, steps interleaved, equals one-shot sample() per request --
+    including stochastic plans with distinct per-request seeds."""
+    eps, xT = _problem(batch=4)
+    ga = stack_plans([make_plan("tab2", SDE, TS)] * 2)            # group A
+    gb = stack_plans([make_plan("em", SDE, TS),                    # group B
+                      make_plan("ddim_eta", SDE, TS, eta=1.0)])
+    kb = _per_request_keys([21, 22])
+    sa = init_state(ga, xT[:2])
+    for k in range(2):                       # A runs 2 steps before B arrives
+        sa = step(ga, k, sa, eps)
+    sb = init_state(gb, xT[2:], kb)
+    ka = 2
+    for k in range(gb.n_steps):              # interleave A and B per tick
+        if ka < ga.n_steps:
+            sa = step(ga, ka, sa, eps)
+            ka += 1
+        sb = step(gb, k, sb, eps)
+    want_a = sample(ga, eps, xT[:2])
+    want_b = sample(gb, eps, xT[2:], kb)
+    np.testing.assert_allclose(np.asarray(sa.x), np.asarray(want_a),
+                               rtol=1e-12, atol=1e-14)
+    np.testing.assert_allclose(np.asarray(sb.x), np.asarray(want_b),
+                               rtol=1e-12, atol=1e-14)
+    # distinct seeds produced distinct stochastic samples
+    assert not np.allclose(np.asarray(sb.x[0]), np.asarray(sb.x[1]))
+
+
+def test_stacked_step_is_single_trace_over_k():
+    """One jitted step serves every step index of a stacked plan (k is a
+    traced argument), including pndm's structural warmup/tail split."""
+    eps, xT = _problem(batch=2)
+    for name in ("tab2", "rho_heun", "pndm"):
+        ts = get_timesteps(SDE, 8, "uniform") if name == "pndm" else TS
+        plan = stack_plans([make_plan(name, SDE, ts)] * 2)
+        run = jax.jit(lambda k, st, p=plan: step(p, k, st, eps))
+        st = init_state(plan, xT)
+        for k in range(plan.n_steps):
+            st = run(jnp.int32(k), st)
+        assert run._cache_size() == 1
+        np.testing.assert_allclose(np.asarray(st.x),
+                                   np.asarray(sample(plan, eps, xT)),
+                                   rtol=1e-10, atol=1e-12)
+
+
+def test_stack_plans_rejects_mismatched_signatures():
+    with pytest.raises(ValueError, match="signature"):
+        stack_plans([make_plan("ddim", SDE, TS), make_plan("tab2", SDE, TS)])
+    with pytest.raises(ValueError, match="stack"):
+        stack_plans([stack_plans([make_plan("ddim", SDE, TS)])])
+
+
+def test_stacked_state_validation():
+    plan = stack_plans([make_plan("em", SDE, TS)] * 2)
+    eps, xT = _problem(batch=2)
+    with pytest.raises(ValueError, match="PRNG key"):
+        init_state(plan, xT)                       # stochastic needs keys
+    with pytest.raises(ValueError, match="per-request keys"):
+        init_state(plan, xT, jax.random.PRNGKey(0))  # one key is not enough
+    with pytest.raises(ValueError, match="leading axis"):
+        init_state(plan, xT[:1], _per_request_keys([1, 2]))
 
 
 def test_plan_nfe_accounting():

@@ -1,10 +1,14 @@
 """Serving engines: AR generation against step-by-step reference; DEIS
-diffusion service batching semantics."""
+diffusion service streaming continuous-batching semantics (per-request
+reproducibility, step-boundary admission, compile/solve time split, NFE
+budget accounting, per-step callbacks)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs.base import get_config
+from repro.diffusion import lm as DLM
 from repro.models import transformer as T
 from repro.serving.engine import ARServeEngine, DiffusionServeEngine, Request
 
@@ -91,6 +95,148 @@ def test_diffusion_engine_shares_executor_across_solver_names():
     assert by_uid[0].tokens.shape == (16,)
 
     # the explicit-eta contract reaches the serving layer too
-    import pytest
     with pytest.raises(ValueError, match="eta"):
         eng.serve([Request(uid=120, seq_len=16, nfe=4, solver="ddim_eta")])
+
+
+# ------------------------------------------------ streaming engine contracts
+@pytest.fixture(scope="module")
+def diff_setup():
+    cfg = get_config("gemma_2b").reduced().with_(objective="diffusion")
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    return params, cfg
+
+
+def test_streaming_interleaved_groups_match_one_shot(diff_setup):
+    """Two groups admitted at different step boundaries, steps interleaved,
+    must produce per-request outputs identical to one-shot solves -- both the
+    engine's own solo serve and the pure ``sample_tokens_stream`` reference.
+    Covers stochastic plans (em, ddim_eta) with distinct per-request seeds."""
+    params, cfg = diff_setup
+    eng = DiffusionServeEngine(params, cfg)
+    # group A: deterministic multistep, two distinct seeds
+    eng.submit(Request(uid=0, seq_len=16, nfe=6, solver="tab2", seed=3))
+    eng.submit(Request(uid=1, seq_len=16, nfe=6, solver="tab2", seed=4))
+    out = eng.tick() + eng.tick()        # A is 2 steps in ...
+    # ... when group B (stochastic, mixed names: em + ddim_eta stack) arrives
+    eng.submit(Request(uid=2, seq_len=16, nfe=6, solver="em", seed=5))
+    eng.submit(Request(uid=3, seq_len=16, nfe=6, solver="ddim_eta", eta=1.0,
+                       seed=6))
+    while eng.busy:
+        out += eng.tick()
+    got = {r.uid: r.tokens for r in out}
+    assert len(got) == 4
+
+    # one-shot reference 1: the same engine serving each request alone
+    solo_eng = DiffusionServeEngine(params, cfg)
+    spec = {0: ("tab2", 3, None), 1: ("tab2", 4, None), 2: ("em", 5, None),
+            3: ("ddim_eta", 6, 1.0)}
+    for uid, (solver, seed, eta) in spec.items():
+        solo = solo_eng.serve([Request(uid=uid, seq_len=16, nfe=6,
+                                       solver=solver, seed=seed, eta=eta)])
+        np.testing.assert_array_equal(solo[0].tokens, got[uid])
+
+    # one-shot reference 2: the pure per-request-keyed sample() path
+    from repro.core.plan import stack_plans
+    sde = eng.sde
+    for uid, (solver, seed, eta) in spec.items():
+        plan = eng._plan(solver, 6, eta)
+        toks, _ = DLM.sample_tokens_stream(
+            params, cfg, stack_plans([plan]), DLM.request_keys([seed]),
+            seq_len=16, prior_std=sde.prior_std())
+        np.testing.assert_array_equal(np.asarray(toks)[0], got[uid])
+
+
+def test_per_request_seeds_honored(diff_setup):
+    """Distinct seeds in one batched group => distinct samples; equal seeds
+    => identical samples, reproducible across serve calls (the old engine
+    keyed the whole group on reqs[0].seed)."""
+    params, cfg = diff_setup
+    eng = DiffusionServeEngine(params, cfg)
+    reqs = [Request(uid=i, seq_len=16, nfe=4, solver="ddim_eta", eta=1.0,
+                    seed=s) for i, s in enumerate([7, 8, 7])]
+    by = {r.uid: r.tokens for r in eng.serve(reqs)}
+    np.testing.assert_array_equal(by[0], by[2])      # same seed, same sample
+    assert not np.array_equal(by[0], by[1])          # distinct seed differs
+    by2 = {r.uid: r.tokens for r in eng.serve(reqs)}  # reproducible
+    for uid in by:
+        np.testing.assert_array_equal(by[uid], by2[uid])
+
+
+def test_rk_nfe_budget_honored(diff_setup):
+    """RK-family requests must not blow their NFE budget: a nfe=10 rho_rk4
+    request runs a 2-interval grid (8 evals), not a 10-interval one (40)."""
+    params, cfg = diff_setup
+    eng = DiffusionServeEngine(params, cfg)
+    res = eng.serve([Request(uid=0, seq_len=8, nfe=10, solver="rho_rk4",
+                             seed=0)])
+    assert res[0].nfe == 8 and res[0].nfe <= 10
+    res = eng.serve([Request(uid=1, seq_len=8, nfe=6, solver="rho_heun",
+                             seed=0)])
+    assert res[0].nfe == 6
+    # pndm's 3x3 extra warmup evals count against the budget too
+    res = eng.serve([Request(uid=2, seq_len=8, nfe=20, solver="pndm",
+                             seed=0)])
+    assert res[0].nfe == 20
+
+
+def test_latency_excludes_compile(diff_setup):
+    """First serve on a cold cache reports compile_s > 0 separately from
+    latency_s; a warm-cache serve reports compile_s == 0 (the old engine
+    folded trace cost into every request's latency)."""
+    params, cfg = diff_setup
+    eng = DiffusionServeEngine(params, cfg)
+    req = [Request(uid=0, seq_len=12, nfe=3, solver="tab1", seed=0)]
+    cold = eng.serve(req)[0]
+    assert cold.compile_s > 0 and cold.latency_s > 0
+    warm = eng.serve(req)[0]
+    assert warm.compile_s == 0.0 and warm.latency_s > 0
+    # compile dominates trace-heavy first calls; solve time must not include it
+    assert warm.latency_s < cold.latency_s + cold.compile_s
+
+
+def test_on_step_callback_streams_progress(diff_setup):
+    """on_step fires once per group per solver step with progress counters;
+    stream_decode=True additionally carries per-step partial decodes of the
+    stacked group."""
+    params, cfg = diff_setup
+    eng = DiffusionServeEngine(params, cfg)
+    events = []
+    reqs = [Request(uid=i, seq_len=8, nfe=4, solver="ddim", seed=i)
+            for i in range(2)]
+    res = eng.serve(reqs, on_step=events.append, stream_decode=True)
+    assert [e.k for e in events] == [1, 2, 3, 4]
+    assert all(e.uids == (0, 1) and e.n_steps == 4 for e in events)
+    assert all(e.tokens.shape == (2, 8) for e in events)
+    # the last streamed partial decode IS the final result
+    final = {r.uid: r.tokens for r in res}
+    np.testing.assert_array_equal(events[-1].tokens[0], final[0])
+    np.testing.assert_array_equal(events[-1].tokens[1], final[1])
+
+
+def test_invalid_request_cannot_strand_queued_work(diff_setup):
+    """Validation happens at submit time and serve() is all-or-nothing: a bad
+    request in a batch leaves the queue empty, and a later serve call sees
+    only its own requests."""
+    params, cfg = diff_setup
+    eng = DiffusionServeEngine(params, cfg)
+    good = Request(uid=0, seq_len=8, nfe=3, solver="ddim", seed=0)
+    with pytest.raises(ValueError, match="eta"):
+        eng.serve([good, Request(uid=1, seq_len=8, nfe=3, solver="ddim_eta")])
+    assert not eng.busy                       # uid=0 was rolled back, not lost
+    with pytest.raises(ValueError, match="unknown solver"):
+        eng.submit(Request(uid=2, seq_len=8, nfe=3, solver="nope"))
+    res = eng.serve([Request(uid=3, seq_len=8, nfe=3, solver="ddim", seed=0)])
+    assert [r.uid for r in res] == [3]        # no stale strays drained in
+
+
+def test_admission_splits_oversized_buckets(diff_setup):
+    """Buckets larger than max_group split into multiple stacked groups, each
+    with its own executor cache entry keyed on its batch size."""
+    params, cfg = diff_setup
+    eng = DiffusionServeEngine(params, cfg, max_group=2)
+    reqs = [Request(uid=i, seq_len=8, nfe=3, solver="ddim", seed=i)
+            for i in range(5)]
+    res = eng.serve(reqs)
+    assert len(res) == 5
+    assert {k[1] for k in eng._compiled} == {2, 1}   # two of 2, one of 1

@@ -114,6 +114,7 @@ def test_cache_specs_divisible(arch):
     jax.tree.map(check, cache_shape, specs, is_leaf=lambda x: isinstance(x, P))
 
 
+@pytest.mark.slow  # full pjit compile of a reduced model (~40s)
 def test_pjit_runs_on_host_mesh():
     """End-to-end pjit with the rules engine on the single host device."""
     from repro.launch.mesh import make_host_mesh

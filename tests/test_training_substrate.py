@@ -94,6 +94,7 @@ def test_markov_source_deterministic_and_banded():
     assert (d < 16).mean() > 0.8  # banded transitions dominate
 
 
+@pytest.mark.slow  # ~200s of real training across both objectives
 @pytest.mark.parametrize("objective", ["ar", "diffusion"])
 def test_loss_decreases_on_synthetic_corpus(objective):
     """30 steps of real training on the Markov corpus must reduce the loss --
