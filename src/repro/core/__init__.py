@@ -24,10 +24,11 @@ migration map.
 from .sde import SDE, VPSDE, VESDE, SubVPSDE, get_sde
 from .schedules import get_timesteps, SCHEDULES
 from .coeffs import ab_coefficients, ddim_coefficients_vp, naive_ei_coefficients, AB_WEIGHTS
-from .plan import (SolverPlan, make_plan, plan_ab, plan_rk, plan_ddim,
-                   plan_euler, plan_em, plan_ipndm, plan_pndm, solver_stages,
-                   stack_plans)
-from .sampler import Hooks, SamplerState, init_state, sample, step
+from .plan import (SolverPlan, make_plan, pad_plan, plan_ab, plan_rk,
+                   plan_ddim, plan_euler, plan_em, plan_ipndm, plan_pndm,
+                   solver_stages, stack_plans, take_rows)
+from .sampler import (Hooks, SamplerState, init_state, sample, step,
+                      take_state_rows)
 from .solvers import (ABSolver, RKSolver, DPMSolver2, EulerSolver, EMSolver,
                       DDIMSolver, IPNDMSolver, PNDMSolver, make_solver,
                       SOLVER_NAMES, SolverBase)
@@ -37,10 +38,11 @@ __all__ = [
     "SDE", "VPSDE", "VESDE", "SubVPSDE", "get_sde",
     "get_timesteps", "SCHEDULES",
     "ab_coefficients", "ddim_coefficients_vp", "naive_ei_coefficients", "AB_WEIGHTS",
-    "SolverPlan", "make_plan", "plan_ab", "plan_rk", "plan_ddim",
+    "SolverPlan", "make_plan", "pad_plan", "plan_ab", "plan_rk", "plan_ddim",
     "plan_euler", "plan_em", "plan_ipndm", "plan_pndm", "solver_stages",
-    "stack_plans",
+    "stack_plans", "take_rows",
     "Hooks", "SamplerState", "init_state", "sample", "step",
+    "take_state_rows",
     "ABSolver", "RKSolver", "DPMSolver2", "EulerSolver", "EMSolver",
     "DDIMSolver", "IPNDMSolver", "PNDMSolver", "make_solver", "SOLVER_NAMES",
     "SolverBase",

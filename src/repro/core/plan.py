@@ -68,6 +68,8 @@ class SolverPlan:
 
     @property
     def n_steps(self) -> int:
+        """Solver steps on this plan's grid (``len(ts) - 1``; includes any
+        inert steps appended by :func:`pad_plan` -- ``nfe`` does not)."""
         return self.ts.shape[-1] - 1
 
     @property
@@ -93,7 +95,34 @@ class SolverPlan:
         return (self.method, self.stochastic, self.fused, self.stacked,
                 tuple(self.ts.shape), leaves)
 
+    @property
+    def family(self) -> tuple:
+        """Signature with the step-count axis wildcarded (unstacked plans).
+
+        Two plans of the same family differ only in how many solver steps
+        they take (e.g. ddim@4 vs ddim@8, or tab3@6 vs ipndm3@10): padding
+        the shorter one with :func:`pad_plan` makes their signatures equal,
+        so they can stack into one ragged serving group. The serving engine
+        buckets pending requests by ``(plan.family, seq_len)``.
+        """
+        if self.stacked:
+            raise ValueError("family is defined for unstacked plans (it is "
+                             "the admission-bucketing key, applied before "
+                             "stacking)")
+
+        def wild(name, shape):
+            if name in _PER_STEP_COEFFS or name in _PER_KNOT_COEFFS:
+                return ("*",) + shape[1:]
+            return shape
+
+        leaves = tuple(sorted((k, wild(k, tuple(v.shape)), str(v.dtype))
+                              for k, v in self.coeffs.items()))
+        return (self.method, self.stochastic, self.fused, ("*",), leaves)
+
     def astype(self, dtype) -> "SolverPlan":
+        """Cast floating leaves to ``dtype`` (no-op fast path when already
+        there -- ``step()`` calls this every step). Static metadata, and
+        therefore the signature's method/flags part, is unchanged."""
         dtype = jnp.dtype(dtype)
         needs = lambda a: jnp.issubdtype(a.dtype, jnp.floating) and a.dtype != dtype
         if not needs(self.ts) and not any(needs(v) for v in self.coeffs.values()):
@@ -117,6 +146,12 @@ def stack_plans(plans) -> SolverPlan:
 
     A stacked plan requires a batched state: ``x`` is ``(R, *inner)``, and
     stochastic plans take per-request PRNG keys of shape ``(R, 2)``.
+
+    Plans may carry *different* true NFE counts (ragged groups built by
+    :func:`pad_plan` -- e.g. ddim@4 stacked with ddim@8): the stacked plan's
+    static ``nfe`` is the maximum, so per-request accounting must be tracked
+    by the caller from each member plan (the serving engine keeps it per
+    row).
     """
     plans = list(plans)
     if not plans:
@@ -129,12 +164,90 @@ def stack_plans(plans) -> SolverPlan:
             raise ValueError(
                 f"cannot stack plans with different signatures:\n  {base.signature}"
                 f"\n  {p.signature}")
-        if p.nfe != base.nfe:
-            raise ValueError("cannot stack plans with different NFE counts")
     coeffs = {k: jnp.stack([p.coeffs[k] for p in plans])
               for k in base.coeffs}
     ts = jnp.stack([p.ts for p in plans])
-    return dataclasses.replace(base, coeffs=coeffs, ts=ts, stacked=True)
+    return dataclasses.replace(base, coeffs=coeffs, ts=ts, stacked=True,
+                               nfe=max(p.nfe for p in plans))
+
+
+# Per-step coefficient leaves (leading axis == n_steps) and per-knot leaves
+# (leading axis == n_steps + 1, like ``ts``). Everything else (RK ``b``
+# weights, PNDM warm-up arrays) is step-count independent. This registry is
+# what ragged-NFE serving relies on: `pad_plan` extends exactly these axes
+# and `SolverPlan.family` wildcards them, so the two can never disagree about
+# which leaves carry the step dimension.
+_PER_STEP_COEFFS = frozenset({"psi", "C", "s", "h", "stage_t", "stage_mu", "A"})
+_PER_KNOT_COEFFS = frozenset({"mu"})
+# time-like per-step leaves are edge-replicated (not zero-padded) so padded
+# steps never evaluate the eps network at an out-of-domain t
+_TIME_LIKE = frozenset({"stage_t"})
+
+
+def pad_plan(plan: SolverPlan, n_steps: int) -> SolverPlan:
+    """Extend an unstacked plan to ``n_steps`` solver steps by padding.
+
+    Padded steps are inert for practical purposes: weight-like coefficients
+    (psi / C / s / h / A / stage_mu) are zero-filled and time/knot-like
+    leaves (ts / mu / stage_t) are edge-replicated, so stepping past the true
+    grid keeps every array finite and every eps-network call in-domain. The
+    first ``plan.n_steps`` steps are the ORIGINAL arrays bit-for-bit, which
+    is what makes ragged serving groups per-request reproducible: a request
+    solved inside a padded stack takes exactly the steps its own plan
+    prescribes, and its row is captured when its true step count is reached.
+
+    Static metadata (``nfe`` in particular) is unchanged -- padding adds no
+    network evaluations that anyone should account for. Two plans of one
+    :attr:`SolverPlan.family` padded to the same ``n_steps`` have equal
+    signatures and therefore stack via :func:`stack_plans`.
+    """
+    if plan.stacked:
+        raise ValueError("pad_plan operates on unstacked plans (pad, then stack)")
+    n = plan.n_steps
+    if n_steps == n:
+        return plan
+    if n_steps < n:
+        raise ValueError(f"cannot pad a {n}-step plan down to {n_steps} steps")
+    pad = n_steps - n
+
+    def edge(v):
+        return jnp.concatenate([v, jnp.repeat(v[-1:], pad, axis=0)])
+
+    def zeros(v):
+        return jnp.concatenate(
+            [v, jnp.zeros((pad,) + v.shape[1:], v.dtype)])
+
+    coeffs = {}
+    for name, v in plan.coeffs.items():
+        if name in _PER_KNOT_COEFFS or name in _TIME_LIKE:
+            coeffs[name] = edge(v)
+        elif name in _PER_STEP_COEFFS:
+            coeffs[name] = zeros(v)
+        else:
+            coeffs[name] = v
+    return dataclasses.replace(plan, coeffs=coeffs, ts=edge(plan.ts))
+
+
+def take_rows(plan: SolverPlan, rows) -> SolverPlan:
+    """Row-gather a stacked plan: keep requests ``rows`` (in that order).
+
+    ``rows`` is a host-side index sequence into the leading request axis.
+    Every coefficient leaf and ``ts`` is gathered on axis 0, so the surviving
+    rows' per-step coefficients are bit-identical to what they were in the
+    larger stack -- this is the plan half of mid-flight group compaction
+    (the state half is :func:`repro.core.sampler.take_state_rows`). The
+    result is still a stacked plan (even for a single surviving row) with the
+    same signature family at the new, smaller batch.
+    """
+    if not plan.stacked:
+        raise ValueError("take_rows requires a stacked plan")
+    idx = np.asarray(rows, dtype=np.int32)
+    if idx.ndim != 1 or idx.size == 0:
+        raise ValueError(f"rows must be a non-empty 1-D index sequence, got "
+                         f"shape {idx.shape}")
+    return dataclasses.replace(
+        plan, coeffs={k: v[idx] for k, v in plan.coeffs.items()},
+        ts=plan.ts[idx])
 
 
 def _mk(method: str, coeffs: dict, ts: np.ndarray, *, stochastic=False,

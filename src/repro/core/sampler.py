@@ -84,6 +84,15 @@ _DEFAULT_HOOKS = Hooks()
 
 
 def init_state(plan: SolverPlan, x_T: Array, key: Optional[Array] = None) -> SamplerState:
+    """Build the initial :class:`SamplerState` for ``plan`` at ``x_T``.
+
+    Shape contract: unstacked plans take ``x_T`` of any shape and an optional
+    single PRNG key; a stacked plan of ``R`` requests takes ``x_T`` of shape
+    ``(R, *inner)`` and per-request keys of shape ``(R, 2)``. ``hist`` is
+    allocated as ``(plan.history_len, *x_T.shape)`` zeros. Stochastic plans
+    REQUIRE a key (deterministic plans carry a dummy key untouched), which is
+    the root of the reproducibility guarantee: every later draw is a pure
+    function of this initial key (chain)."""
     if plan.stochastic and key is None:
         raise ValueError(f"stochastic plan (method={plan.method!r}) requires a PRNG key")
     if plan.stacked:
@@ -101,6 +110,26 @@ def init_state(plan: SolverPlan, x_T: Array, key: Optional[Array] = None) -> Sam
         key = jax.random.PRNGKey(0)
     hist = jnp.zeros((plan.history_len,) + x_T.shape, x_T.dtype)
     return SamplerState(x=x_T, hist=hist, key=key, k=jnp.int32(0))
+
+
+def take_state_rows(state: SamplerState, rows) -> SamplerState:
+    """Row-gather a stacked solve's state: keep requests ``rows``, in order.
+
+    Gathers ``x`` on axis 0, ``hist`` on axis 1 (its layout is
+    ``(history_len, R, *inner)``) and the per-request key stack on axis 0;
+    the step counter ``k`` is untouched. Because every per-request quantity
+    -- including each row's PRNG key chain -- is carried whole, continuing a
+    compacted solve is *bit-exact*: surviving row ``i`` takes exactly the
+    remaining steps and noise draws it would have taken in the larger stack
+    (or solo). This is the state half of mid-flight group compaction; the
+    plan half is :func:`repro.core.plan.take_rows`.
+    """
+    idx = jnp.asarray(rows, dtype=jnp.int32)
+    if idx.ndim != 1 or idx.shape[0] == 0:
+        raise ValueError(f"rows must be a non-empty 1-D index sequence, got "
+                         f"shape {idx.shape}")
+    return SamplerState(x=state.x[idx], hist=state.hist[:, idx],
+                        key=state.key[idx], k=state.k)
 
 
 # ------------------------------------------------------------------ steps

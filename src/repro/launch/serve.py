@@ -1,21 +1,155 @@
 """Serving launcher: AR decode or DEIS diffusion sampling service.
 
+Three diffusion transports:
+
+  sync (default)  -- drain a request list through the engine in-process:
     PYTHONPATH=src python -m repro.launch.serve --arch gemma_2b --reduced \
         --mode diffusion --nfe 10 --solver tab3 --requests 8
+
+  driver          -- asyncio demo over the ServeDriver: mixed-priority
+                     ragged-NFE requests submitted concurrently via
+                     ``submit_async``, per-request progress streamed back:
+    PYTHONPATH=src python -m repro.launch.serve --arch gemma_2b --reduced \
+        --transport driver --requests 6
+
+  http            -- an HTTP-ish endpoint on the driver: POST JSON to
+                     /v1/generate ({"seq_len":32,"nfe":10,"solver":"tab3",
+                     "seed":0,"priority":0,"deadline_s":null,"stream":true});
+                     with "stream" the response is NDJSON StepEvents followed
+                     by the final result line:
+    PYTHONPATH=src python -m repro.launch.serve --arch gemma_2b --reduced \
+        --transport http --port 8433
+
+AR mode is unchanged:
     PYTHONPATH=src python -m repro.launch.serve --arch gemma_2b --reduced \
         --mode ar --requests 4 --max-new 16
 """
 from __future__ import annotations
 
 import argparse
+import asyncio
+import itertools
+import json
 
 import jax
 import numpy as np
 
 from ..configs.base import get_config
 from ..models import transformer as T
+from ..serving.driver import ServeDriver
 from ..serving.engine import ARServeEngine, DiffusionServeEngine, Request
 from ..training import checkpoint as CKPT
+
+
+def make_http_server(driver: ServeDriver, port: int = 0):
+    """HTTP-ish transport: a threaded stdlib server feeding the driver.
+
+    POST /v1/generate with a JSON body of Request fields (seq_len, nfe,
+    solver, eta, seed, priority, deadline_s). Set ``"stream": true`` for an
+    NDJSON response: one ``{"event":"step","k":..,"n_steps":..}`` line per
+    solver step of the request (its own progress, even inside a ragged
+    group), then a ``{"event":"result",...}`` line with tokens and the
+    latency/NFE accounting. Without ``stream``, one JSON document with the
+    final result. Invalid requests get a 400 carrying the engine's
+    validation message. Returns the (not yet serving) HTTPServer; callers
+    run ``serve_forever()`` (and may read the bound port off
+    ``server.server_address`` when asking for port 0).
+
+    Every handler thread only ever touches the driver's thread-safe
+    ``submit`` and the returned handle -- JAX stays on the scheduler thread.
+    """
+    from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+
+    uids = itertools.count()
+
+    class Handler(BaseHTTPRequestHandler):
+        protocol_version = "HTTP/1.0"   # close-delimited streaming bodies
+
+        def log_message(self, *a):       # keep scheduler logs readable
+            pass
+
+        def _json(self, code: int, obj: dict) -> None:
+            body = json.dumps(obj).encode()
+            self.send_response(code)
+            self.send_header("Content-Type", "application/json")
+            self.send_header("Content-Length", str(len(body)))
+            self.end_headers()
+            self.wfile.write(body)
+
+        def do_POST(self):
+            if self.path not in ("/generate", "/v1/generate"):
+                return self._json(404, {"error": f"no route {self.path}"})
+            try:
+                n = int(self.headers.get("Content-Length") or 0)
+                body = json.loads(self.rfile.read(n) or b"{}")
+                req = Request(
+                    uid=next(uids),
+                    seq_len=int(body.get("seq_len", 32)),
+                    nfe=int(body.get("nfe", 10)),
+                    solver=str(body.get("solver", "tab3")),
+                    eta=body.get("eta"),
+                    seed=int(body.get("seed", 0)),
+                    priority=int(body.get("priority", 0)),
+                    deadline_s=body.get("deadline_s"))
+            except (ValueError, TypeError, json.JSONDecodeError) as e:
+                return self._json(400, {"error": f"bad request body: {e}"})
+            handle = driver.submit(req)
+            if not body.get("stream"):
+                try:
+                    res = handle.result()
+                except (ValueError, TypeError) as e:   # request validation
+                    return self._json(400, {"error": str(e)})
+                except Exception as e:   # server fault (e.g. failed tick)
+                    return self._json(500, {"error": str(e)})
+                return self._json(200, _result_json(res))
+            # NDJSON streaming: headers first, then a line per step event
+            self.send_response(200)
+            self.send_header("Content-Type", "application/x-ndjson")
+            self.end_headers()
+            for ev in handle:
+                line = {"event": "step", "uid": req.uid, "k": ev.k,
+                        "n_steps": ev.n_steps}
+                if ev.tokens is not None:
+                    line["tokens"] = np.asarray(ev.tokens).tolist()
+                self.wfile.write((json.dumps(line) + "\n").encode())
+                self.wfile.flush()
+            try:
+                res = handle.result()
+            except Exception as e:
+                self.wfile.write((json.dumps(
+                    {"event": "error", "uid": req.uid, "error": str(e)})
+                    + "\n").encode())
+                return
+            self.wfile.write((json.dumps(
+                {"event": "result", **_result_json(res)}) + "\n").encode())
+
+    return ThreadingHTTPServer(("127.0.0.1", port), Handler)
+
+
+def _result_json(res) -> dict:
+    return {"uid": res.uid, "tokens": np.asarray(res.tokens).tolist(),
+            "latency_s": res.latency_s, "nfe": res.nfe,
+            "compile_s": res.compile_s}
+
+
+async def _driver_demo(driver: ServeDriver, n_requests: int, seq_len: int):
+    """Mixed-priority ragged-NFE workload over ``submit_async``."""
+    nfes = [4, 8, 12]
+    handles = []
+    for i in range(n_requests):
+        req = Request(uid=i, seq_len=seq_len, nfe=nfes[i % len(nfes)],
+                      solver="ddim", seed=i, priority=i % 2,
+                      deadline_s=2.0 if i % 2 else None)
+        handles.append(await driver.submit_async(req))
+
+    async def consume(h):
+        async for ev in h:
+            print(f"  req {h.uid}: step {ev.k}/{ev.n_steps}")
+        res = await h.result()
+        print(f"req {res.uid}: nfe={res.nfe} solve={res.latency_s:.2f}s")
+        return res
+
+    return await asyncio.gather(*[consume(h) for h in handles])
 
 
 def main():
@@ -23,12 +157,18 @@ def main():
     ap.add_argument("--arch", required=True)
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--mode", choices=["ar", "diffusion"], default="diffusion")
+    ap.add_argument("--transport", choices=["sync", "driver", "http"],
+                    default="sync")
+    ap.add_argument("--port", type=int, default=8433)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--nfe", type=int, default=10)
     ap.add_argument("--solver", default="tab3")
     ap.add_argument("--seq-len", type=int, default=32)
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--steps-per-tick", type=int, default=None,
+                    help="throttle: groups stepped per tick (enables EDF)")
+    ap.add_argument("--no-compaction", action="store_true")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -41,7 +181,29 @@ def main():
         print(f"restored params from {args.ckpt_dir}")
 
     if args.mode == "diffusion":
-        eng = DiffusionServeEngine(params, cfg)
+        eng = DiffusionServeEngine(params, cfg,
+                                   steps_per_tick=args.steps_per_tick,
+                                   compaction=not args.no_compaction)
+        if args.transport == "http":
+            with ServeDriver(eng) as driver:
+                server = make_http_server(driver, args.port)
+                host, port = server.server_address
+                print(f"serving DEIS on http://{host}:{port}/v1/generate "
+                      "(POST JSON; Ctrl-C to stop)")
+                try:
+                    server.serve_forever()
+                except KeyboardInterrupt:
+                    pass
+                finally:
+                    server.shutdown()
+            return
+        if args.transport == "driver":
+            with ServeDriver(eng) as driver:
+                results = asyncio.run(
+                    _driver_demo(driver, args.requests, args.seq_len))
+                print(f"served {len(results)} requests; "
+                      f"stats={driver.stats()}")
+            return
         reqs = [Request(uid=i, seq_len=args.seq_len, nfe=args.nfe,
                         solver=args.solver, seed=i) for i in range(args.requests)]
         results = eng.serve(

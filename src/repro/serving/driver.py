@@ -1,0 +1,315 @@
+"""Async request-transport driver around :class:`DiffusionServeEngine`.
+
+The engine is a synchronous scheduler: ``submit()`` enqueues, ``tick()``
+advances. :class:`ServeDriver` turns that into a *service*: a dedicated
+executor thread owns the engine and runs the tick loop, while any number of
+transport threads (HTTP handlers, asyncio tasks, tests) hand requests over a
+thread-safe inbox and get back a :class:`ServeStream` -- a per-request
+future for the final :class:`~repro.serving.engine.Result` plus an ordered
+stream of :class:`~repro.serving.engine.StepEvent` progress (optionally with
+partial decodes).
+
+Threading contract
+------------------
+
+* ONE thread (the driver's) ever touches the engine and therefore JAX.
+  Transports only enqueue (``queue.Queue``) and wait on futures, so no JAX
+  object crosses threads and no locking of engine state is needed.
+* ``submit()`` is thread-safe and non-blocking; ``submit_async()`` is its
+  asyncio twin (the returned handle supports ``async for`` over events and
+  ``await handle.result()``).
+* Per-request event fan-out happens on the scheduler thread between solver
+  steps (the engine's ``on_step`` contract): each event is sliced down to
+  the request's own row and progress (``k`` capped at the request's true
+  step count in a ragged group) and pushed to that request's stream.
+
+Ordering/reproducibility guarantee: the driver adds no randomness and never
+reorders a request's own events; samples remain a pure function of
+``(solver, nfe, eta, seed, seq_len)`` exactly as in the synchronous engine
+-- priorities, deadlines, admission timing and compaction only change WHEN
+steps run (see the engine module docstring).
+
+Failure contract: engine-side validation errors (unknown solver, ddim_eta
+without eta) are caught on the scheduler thread and delivered to the ONE
+offending request's future as the original exception; other in-flight
+requests are unaffected (contrast with the synchronous ``serve()``'s
+all-or-nothing batch validation).
+"""
+from __future__ import annotations
+
+import asyncio
+import dataclasses
+import queue
+import threading
+from concurrent.futures import Future
+from typing import Iterator, Optional
+
+from .engine import DiffusionServeEngine, Request, Result, StepEvent
+
+_CLOSE = object()   # stream sentinel: no more events
+
+
+class ServeStream:
+    """Per-request handle: an event stream plus a future for the Result.
+
+    Iterating (``for ev in stream``) yields :class:`StepEvent`\\ s scoped to
+    THIS request (``uids == (uid,)``, ``n_steps`` = the request's own step
+    count, ``tokens`` = its own row when the driver streams decodes) and
+    ends when the request finishes or fails. ``result()`` blocks for the
+    final :class:`Result` (or re-raises the request's validation error).
+    Both may be consumed from any thread, together or independently.
+    """
+
+    def __init__(self, uid: int):
+        self.uid = uid
+        self._events: queue.Queue = queue.Queue()
+        self._future: Future = Future()
+
+    # ---- producer side (driver thread) ----
+    def _push(self, event: StepEvent) -> None:
+        self._events.put(event)
+
+    def _finish(self, result: Result) -> None:
+        if self._future.done():           # already failed (e.g. by _crash)
+            return
+        self._future.set_result(result)   # result first: visible the moment
+        self._events.put(_CLOSE)          # ... iteration ends
+
+    def _fail(self, exc: BaseException) -> None:
+        if self._future.done():
+            return
+        self._future.set_exception(exc)
+        self._events.put(_CLOSE)
+
+    # ---- consumer side (any thread) ----
+    def result(self, timeout: Optional[float] = None) -> Result:
+        """Block until the request finishes; raises its validation error."""
+        return self._future.result(timeout)
+
+    def done(self) -> bool:
+        """True once the request has finished or failed."""
+        return self._future.done()
+
+    def events(self) -> Iterator[StepEvent]:
+        """Yield this request's StepEvents in order until completion."""
+        while True:
+            ev = self._events.get()
+            if ev is _CLOSE:
+                return
+            yield ev
+
+    def __iter__(self) -> Iterator[StepEvent]:
+        return self.events()
+
+
+class AsyncServeStream:
+    """Asyncio view of a :class:`ServeStream`.
+
+    ``async for ev in handle`` iterates events; ``await handle.result()``
+    awaits the final Result. Event waits are delegated to a worker thread
+    (``asyncio.to_thread``) so the loop is never blocked by the scheduler.
+    """
+
+    def __init__(self, stream: ServeStream):
+        self._stream = stream
+        self.uid = stream.uid
+
+    def __aiter__(self):
+        return self
+
+    async def __anext__(self) -> StepEvent:
+        # Cancellation-safe: poll with non-blocking gets + short sleeps
+        # instead of parking a worker thread in Queue.get() -- a cancelled
+        # to_thread future leaves its thread blocked, and that orphan would
+        # later swallow the next event (or the close sentinel). Solver steps
+        # are O(10ms+), so a few-ms poll adds no measurable latency.
+        while True:
+            try:
+                ev = self._stream._events.get_nowait()
+            except queue.Empty:
+                await asyncio.sleep(0.002)
+                continue
+            if ev is _CLOSE:
+                raise StopAsyncIteration
+            return ev
+
+    async def result(self) -> Result:
+        """Await the final Result (re-raises the request's validation error)."""
+        return await asyncio.wrap_future(self._stream._future)
+
+    def done(self) -> bool:
+        """True once the request has finished or failed."""
+        return self._stream.done()
+
+
+class ServeDriver:
+    """Run a :class:`DiffusionServeEngine` on a dedicated scheduler thread.
+
+    Usage (sync transport)::
+
+        with ServeDriver(engine, stream_decode=True) as drv:
+            h = drv.submit(Request(uid=0, seq_len=32, nfe=10, solver="tab3"))
+            for ev in h:                      # streamed progress
+                print(ev.k, "/", ev.n_steps)
+            tokens = h.result().tokens
+
+    Usage (asyncio transport)::
+
+        h = await drv.submit_async(Request(...))
+        async for ev in h: ...
+        res = await h.result()
+
+    The driver is the natural place to throttle the scheduler for latency:
+    construct the engine with ``steps_per_tick=k`` and the driver's tick
+    loop becomes earliest-deadline-first over in-flight groups (with
+    starvation aging), admitting newly transported requests at every step
+    boundary.
+    """
+
+    def __init__(self, engine: DiffusionServeEngine, *,
+                 stream_decode: bool = False, idle_wait_s: float = 0.005):
+        self.engine = engine
+        self.stream_decode = stream_decode
+        self.idle_wait_s = idle_wait_s
+        self._inbox: queue.Queue = queue.Queue()
+        self._streams: dict[int, ServeStream] = {}
+        self._lock = threading.Lock()
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+
+    # ------------------------------------------------------------ lifecycle
+    def start(self) -> "ServeDriver":
+        """Start the scheduler thread (idempotent)."""
+        if self._thread is None or not self._thread.is_alive():
+            self._stop.clear()
+            self._thread = threading.Thread(
+                target=self._run, name="deis-serve-driver", daemon=True)
+            self._thread.start()
+        return self
+
+    def stop(self, timeout: Optional[float] = None) -> None:
+        """Drain: finish everything submitted, then stop the thread.
+
+        If ``timeout`` expires while the scheduler is still mid-solve the
+        thread reference is KEPT, so a later ``submit()``/``start()`` cannot
+        spawn a second scheduler thread over a live one (the engine is
+        single-threaded by contract)."""
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout)
+            if not self._thread.is_alive():
+                self._thread = None
+
+    def __enter__(self) -> "ServeDriver":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # ------------------------------------------------------------ transport
+    def submit(self, request: Request) -> ServeStream:
+        """Thread-safe, non-blocking submission; returns the request handle.
+
+        ``request.uid`` must be unique among in-flight requests (it keys the
+        event fan-out). Validation happens on the scheduler thread; errors
+        surface on the returned handle, not here.
+        """
+        stream = ServeStream(request.uid)
+        with self._lock:
+            if request.uid in self._streams:
+                raise ValueError(f"request uid {request.uid} is already "
+                                 "in flight")
+            self._streams[request.uid] = stream
+        self._inbox.put((request, stream))
+        # start AFTER the put: if a concurrent stop() let the scheduler
+        # thread observe (stop set, inbox empty) and exit between our
+        # registration and the put, this restarts it and the new thread
+        # drains the inbox -- no request can be stranded with an unresolved
+        # future. (start() is idempotent while the thread lives.)
+        self.start()
+        return stream
+
+    async def submit_async(self, request: Request) -> AsyncServeStream:
+        """Asyncio twin of :meth:`submit` (same queue, same guarantees)."""
+        return AsyncServeStream(self.submit(request))
+
+    def stats(self) -> dict:
+        """Scheduler counters (safe snapshot; values may lag one tick)."""
+        eng = self.engine
+        return {"ticks": eng.ticks, "executors": eng.num_executors,
+                "wasted_row_steps": eng.wasted_row_steps,
+                "in_flight": len(self._streams)}
+
+    # ------------------------------------------------------------ scheduler
+    def _drain_inbox(self, block: bool) -> None:
+        try:
+            first = self._inbox.get(timeout=self.idle_wait_s) if block \
+                else self._inbox.get_nowait()
+        except queue.Empty:
+            return
+        batch = [first]
+        while True:
+            try:
+                batch.append(self._inbox.get_nowait())
+            except queue.Empty:
+                break
+        for req, stream in batch:
+            try:
+                self.engine.submit(req)
+            except Exception as e:  # per-request failure, not batch-fatal
+                with self._lock:
+                    self._streams.pop(req.uid, None)
+                stream._fail(e)
+
+    def _fanout(self, event: StepEvent) -> None:
+        """Engine ``on_step`` callback: slice the group event per request."""
+        for i, uid in enumerate(event.uids):
+            stream = self._streams.get(uid)
+            if stream is None:
+                continue   # submitted directly to the engine, or finished
+            row_n = event.row_steps[i] if event.row_steps else event.n_steps
+            if event.k > row_n:
+                continue   # retired row still riding an uncompacted group
+            tok = event.tokens[i] if event.tokens is not None else None
+            stream._push(dataclasses.replace(
+                event, uids=(uid,), k=min(event.k, row_n), n_steps=row_n,
+                tokens=tok, row_steps=None))
+
+    def _crash(self, exc: BaseException) -> None:
+        """A tick blew up: the engine's in-flight state is unreliable, so
+        fail EVERY in-flight request with the error (no silent thread death,
+        no futures stranded forever) and reset the scheduler queues --
+        including requests still in the inbox, which are drained and failed
+        too (their streams are already registered; leaving them queued would
+        resubmit them against their already-failed futures). The driver
+        keeps serving later submissions."""
+        with self._lock:
+            streams, self._streams = self._streams, {}
+        while True:
+            try:
+                self._inbox.get_nowait()
+            except queue.Empty:
+                break
+        self.engine.reset()
+        for stream in streams.values():
+            stream._fail(exc)
+
+    def _run(self) -> None:
+        while True:
+            busy = self.engine.busy
+            self._drain_inbox(block=not busy)
+            if self.engine.busy:
+                try:
+                    results = self.engine.tick(
+                        on_step=self._fanout,
+                        stream_decode=self.stream_decode)
+                except Exception as e:   # noqa: BLE001 - fail open, keep serving
+                    self._crash(e)
+                    continue
+                for res in results:
+                    with self._lock:
+                        stream = self._streams.pop(res.uid, None)
+                    if stream is not None:
+                        stream._finish(res)
+            elif self._stop.is_set() and self._inbox.empty():
+                return

@@ -10,33 +10,58 @@ Diffusion serving semantics
 
 Admission.  ``submit()`` enqueues; at every scheduler ``tick()`` pending
 requests are admitted into *groups* at a step boundary. A group stacks up to
-``max_group`` requests whose plans share one :attr:`SolverPlan.signature` and
+``max_group`` requests whose plans share one :attr:`SolverPlan.family` and
 whose ``seq_len`` matches -- solver *names* may differ (ddim / euler /
-naive_ei at one NFE stack into a single solve via
-:func:`repro.core.plan.stack_plans`). Each request gets its own PRNG key
-derived from its own ``Request.seed``, so samples are per-request
-reproducible regardless of batch composition or admission time. Requests
-never join a group mid-solve; they form a new group that is interleaved with
-the groups already in flight.
+naive_ei stack into a single solve via :func:`repro.core.plan.stack_plans`)
+and so may NFE budgets: shorter plans are padded to the bucket's longest
+grid with :func:`repro.core.plan.pad_plan` (*ragged* groups). Each request
+gets its own PRNG key derived from its own ``Request.seed``, so samples are
+per-request reproducible regardless of batch composition, admission time, or
+compaction. Requests never join a group mid-solve; they form a new group
+that is interleaved with the groups already in flight.
 
-Scheduling.  A tick advances every active group by ONE solver step
-(round-robin at NFE granularity), so a newly admitted 5-NFE request starts
-making progress immediately instead of waiting behind a 50-NFE group.
-Finished groups are rounded to tokens and their ``Result``s emitted from the
-same tick.
+Scheduling.  A tick selects up to ``steps_per_tick`` groups (default: all)
+and advances each by ONE solver step, so a newly admitted 5-NFE request
+starts making progress immediately instead of waiting behind a 50-NFE group.
+Selection is priority/deadline-aware, not round-robin: groups are ordered by
+effective priority (max member ``Request.priority``, boosted by one level
+per ``aging_ticks`` consecutive skipped ticks -- starvation aging), then
+earliest absolute deadline (min member ``submit time + deadline_s``; no
+deadline sorts last), then admission order. With the default
+``steps_per_tick=None`` every active group steps each tick and the ordering
+only decides dispatch order; a throttled driver (``steps_per_tick=k``) gets
+true earliest-deadline-first with guaranteed progress for starved work.
+
+Completion & compaction.  Rows of a ragged group finish at their OWN step
+count: a finished row's Result is emitted from that very tick (its latency
+is the group's accumulated solve time so far), not when the whole group
+drains. With ``compaction=True`` (default) the group is then *compacted*:
+surviving rows are row-gathered (:func:`repro.core.plan.take_rows` +
+:func:`repro.core.sampler.take_state_rows`) into a smaller
+``(signature, batch, seq_len)`` bucket and keep stepping there, instead of
+burning evals on retired rows. Compaction preserves bitwise per-request
+reproducibility because every per-row quantity -- coefficients, iterate,
+eps history, PRNG key chain -- moves whole. ``wasted_row_steps`` counts the
+steps executed on already-finished rows (zero under compaction; the
+no-compaction baseline pays one per dead row per tick).
 
 Compile cache.  One jitted ``step`` is AOT-compiled per
 ``(plan.signature, batch, seq_len)`` and reused across groups, solver names
 and step indices (``k`` is a traced argument; pndm's warmup/tail split is a
-``lax.cond``). ``Result.compile_s`` carries the trace+compile cost charged to
-the first group that needed the executor; ``Result.latency_s`` is pure solve
-wall-time, so benchmark numbers are not poisoned by trace cost.
+``lax.cond``). Compaction looks its smaller batch up in the same cache, so a
+steady-state workload (e.g. the warm half of ``benchmarks/deis_serving``)
+runs with ZERO recompilation. ``Result.compile_s`` carries the trace+compile
+cost charged to the group that needed the executor; ``Result.latency_s`` is
+pure solve wall-time, so benchmark numbers are not poisoned by trace cost.
 
 Callback contract.  ``serve(..., on_step=fn)`` invokes ``fn(StepEvent)``
 after every group step with the group's uids and progress; with
 ``stream_decode=True`` the event also carries the partial decode of the
-current iterate (streamed tokens). The callback runs on the scheduler thread
-between steps -- keep it cheap or copy the event out.
+current iterate (streamed tokens). ``StepEvent.row_steps`` gives each
+request's own total step count so per-request progress is well-defined in a
+ragged group. The callback runs on the scheduler thread between steps --
+keep it cheap or copy the event out (the async ``ServeDriver`` fans it out
+to per-request streams).
 
 Each NFE is one full-sequence backbone forward, so this is where DEIS's
 small-NFE advantage becomes throughput: serving capacity scales ~1/NFE.
@@ -44,6 +69,7 @@ small-NFE advantage becomes throughput: serving capacity scales ~1/NFE.
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
 from collections import deque
 from typing import Callable, Optional
@@ -55,7 +81,7 @@ import numpy as np
 from ..configs.base import ModelConfig
 from ..core import get_timesteps, make_plan
 from ..core import sampler as SAMPLER
-from ..core.plan import SolverPlan, solver_stages, stack_plans
+from ..core.plan import SolverPlan, pad_plan, solver_stages, stack_plans, take_rows
 from ..core.sde import SDE, VPSDE
 from ..diffusion import lm as DLM
 from ..models import transformer as T
@@ -64,6 +90,14 @@ from ..training.steps import make_decode_step, make_prefill_step
 
 @dataclasses.dataclass
 class Request:
+    """One serving request (AR or diffusion; diffusion fields listed last).
+
+    ``priority`` (higher = more urgent) and ``deadline_s`` (latency budget in
+    seconds, relative to submit time; ``None`` = best-effort) feed the
+    engine's priority/deadline-aware scheduler. They influence WHEN a
+    request is stepped, never WHAT it computes: samples depend only on
+    ``(solver, nfe, eta, seed, seq_len)``.
+    """
     uid: int
     prompt: np.ndarray | None = None       # AR: token prompt
     max_new_tokens: int = 32
@@ -72,10 +106,16 @@ class Request:
     solver: str = "tab3"
     eta: float | None = None               # required iff solver == "ddim_eta"
     seed: int = 0
+    priority: int = 0                      # scheduling weight (higher first)
+    deadline_s: float | None = None        # latency budget from submit time
 
 
 @dataclasses.dataclass
 class Result:
+    """Final per-request outcome. ``latency_s`` is the request's group solve
+    time accumulated up to the tick ITS row finished (ragged rows finish
+    early); ``nfe`` is the true evals its own plan spent (never the padded
+    group's); ``compile_s`` is trace+compile charged to its group."""
     uid: int
     tokens: np.ndarray
     latency_s: float            # solve wall-time of the request's group,
@@ -87,12 +127,20 @@ class Result:
 
 @dataclasses.dataclass
 class StepEvent:
-    """Per-step progress emitted to the ``on_step`` serving callback."""
+    """Per-step progress emitted to the ``on_step`` serving callback.
+
+    In a ragged group ``n_steps`` is the LONGEST member's step count;
+    ``row_steps[i]`` is request ``uids[i]``'s own total, so per-request
+    progress is ``min(k, row_steps[i]) / row_steps[i]`` (this is what the
+    driver reports on each request's stream).
+    """
     uids: tuple                      # requests in the group that just stepped
     k: int                           # steps completed (1-based after the step)
     n_steps: int                     # total solver steps for this group
     tokens: Optional[np.ndarray] = None  # (R, seq_len) partial decode when
                                          # serve(stream_decode=True)
+    row_steps: Optional[tuple] = None    # per-request true step counts
+                                         # (aligned with uids)
 
 
 class ARServeEngine:
@@ -152,16 +200,39 @@ _PNDM_WARMUP_EXTRA = 9
 
 
 @dataclasses.dataclass
+class _Row:
+    """Per-request bookkeeping inside a (possibly ragged) group."""
+    req: Request
+    n_steps: int                # TRUE solver steps of this request's own plan
+    nfe: int                    # TRUE network evals (plan.nfe, pre-padding)
+    deadline: float             # absolute deadline (inf when best-effort)
+    done: bool = False          # Result already emitted
+
+
+@dataclasses.dataclass
 class _Group:
-    """One in-flight stacked solve (requests admitted together)."""
-    reqs: list
+    """One in-flight stacked solve (requests admitted together).
+
+    ``rows`` shrinks under compaction; ``k`` keeps counting from admission
+    (row completion is ``k == row.n_steps`` regardless of compaction).
+    """
+    rows: list                  # list[_Row], aligned with the stacked axis
+    sig: tuple                  # member plans' (padded, unstacked) signature
     plan: SolverPlan            # stacked: leading request axis on all leaves
     state: SAMPLER.SamplerState
     fn: Callable                # AOT-compiled step(params, plan, k, state)
-    n_steps: int
+    n_steps: int                # max live row n_steps (event horizon)
     compile_s: float            # 0.0 when the executor cache was warm
+    priority: int               # max member Request.priority
+    deadline: float             # min member absolute deadline (inf if none)
+    arrival: int                # admission sequence number (tie-break)
     k: int = 0                  # steps completed
     solve_s: float = 0.0        # accumulated solve wall-time (excl. compile)
+    skipped: int = 0            # consecutive ticks not selected (aging)
+
+    @property
+    def uids(self) -> tuple:
+        return tuple(r.req.uid for r in self.rows)
 
 
 class DiffusionServeEngine:
@@ -174,16 +245,31 @@ class DiffusionServeEngine:
     """
 
     def __init__(self, params, cfg: ModelConfig, sde: Optional[SDE] = None,
-                 schedule: str = "quadratic", max_group: int = 8):
+                 schedule: str = "quadratic", max_group: int = 8,
+                 steps_per_tick: int | None = None, aging_ticks: int = 8,
+                 compaction: bool = True):
+        """``steps_per_tick``: groups advanced per tick (None = all active,
+        the PR-2 behavior; an int enables true EDF selection).
+        ``aging_ticks``: skipped ticks per +1 effective-priority boost
+        (starvation aging). ``compaction``: retire finished rows mid-flight
+        and re-pack survivors into a smaller cached batch bucket."""
         assert cfg.objective == "diffusion"
         self.params, self.cfg = params, cfg
         self.sde = sde or VPSDE()
         self.schedule = schedule
         self.max_group = max_group
+        # clamp: 0/negative would make tick() select nothing and busy-loop
+        self.steps_per_tick = None if steps_per_tick is None \
+            else max(1, steps_per_tick)
+        self.aging_ticks = max(1, aging_ticks)
+        self.compaction = compaction
         self._plans: dict = {}      # (solver, nfe, eta) -> SolverPlan
         self._compiled: dict = {}   # (plan.signature, batch, seq_len) -> AOT step
-        self._pending: deque = deque()   # (Request, SolverPlan) awaiting admission
+        self._pending: deque = deque()   # (Request, SolverPlan, t_submit)
         self._active: list[_Group] = []
+        self._arrivals = 0          # admission sequence counter
+        self.ticks = 0              # scheduler ticks executed (metric)
+        self.wasted_row_steps = 0   # steps burned on already-finished rows
 
     # ------------------------------------------------------------- plans
     def _plan(self, solver: str, nfe: int, eta: float | None) -> SolverPlan:
@@ -229,42 +315,110 @@ class DiffusionServeEngine:
         """Validate and enqueue; the request is admitted into a group at the
         next tick. Validation (unknown solver, ddim_eta without eta) raises
         HERE, before the request enters the queue, so a bad request can never
-        strand already-queued work mid-admission."""
+        strand already-queued work mid-admission. The submit timestamp
+        anchors the request's absolute deadline (``deadline_s`` is relative
+        to NOW, not to admission)."""
+        if request.seq_len < 1:
+            raise ValueError(f"Request.seq_len must be >= 1, got "
+                             f"{request.seq_len}")
+        if request.nfe < 1:
+            raise ValueError(f"Request.nfe must be >= 1, got {request.nfe}")
         plan = self._plan(request.solver, request.nfe,
                           request.eta if request.solver == "ddim_eta" else None)
-        self._pending.append((request, plan))
+        self._pending.append((request, plan, time.monotonic()))
+
+    @staticmethod
+    def _abs_deadline(req: Request, t_submit: float) -> float:
+        return math.inf if req.deadline_s is None else t_submit + req.deadline_s
 
     def _admit(self) -> None:
         """Form new groups from everything pending (step-boundary admission).
 
-        Bucketing is by (plan signature, seq_len): any mix of solver names
-        whose plans stack is one solve. Buckets larger than ``max_group``
-        split into multiple groups."""
+        Bucketing is by (plan.family, seq_len): any mix of solver names AND
+        NFE budgets whose plans pad+stack is one solve (ragged groups).
+        Within a bucket the most urgent requests (priority desc, deadline
+        asc) are chunked first; buckets larger than ``max_group`` split into
+        multiple groups."""
         if not self._pending:
             return
         buckets: dict = {}
         while self._pending:
-            r, plan = self._pending.popleft()
-            buckets.setdefault((plan.signature, r.seq_len),
-                               []).append((r, plan))
-        for (sig, seq_len), items in buckets.items():
+            r, plan, t_sub = self._pending.popleft()
+            buckets.setdefault((plan.family, r.seq_len),
+                               []).append((r, plan, t_sub))
+        for (_fam, seq_len), items in buckets.items():
+            items.sort(key=lambda it: (-it[0].priority,
+                                       self._abs_deadline(it[0], it[2])))
             for i in range(0, len(items), self.max_group):
                 chunk = items[i:i + self.max_group]
-                reqs = [r for r, _ in chunk]
-                plan = stack_plans([p for _, p in chunk])
+                n_max = max(p.n_steps for _, p, _ in chunk)
+                padded = [pad_plan(p, n_max) for _, p, _ in chunk]
+                sig = padded[0].signature
+                plan = stack_plans(padded)
+                reqs = [r for r, _, _ in chunk]
+                rows = [_Row(req=r, n_steps=p.n_steps, nfe=p.nfe,
+                             deadline=self._abs_deadline(r, t))
+                        for (r, p, t) in chunk]
                 keys = DLM.request_keys([r.seed for r in reqs])
                 state = DLM.init_sample_state(
                     self.cfg, plan, keys, seq_len=seq_len,
                     prior_std=self.sde.prior_std())
                 fn, compile_s = self._executor(sig, plan, state)
+                self._arrivals += 1
                 self._active.append(_Group(
-                    reqs=reqs, plan=plan, state=state, fn=fn,
-                    n_steps=plan.n_steps, compile_s=compile_s))
+                    rows=rows, sig=sig, plan=plan, state=state, fn=fn,
+                    n_steps=n_max, compile_s=compile_s,
+                    priority=max(r.priority for r in reqs),
+                    deadline=min(r.deadline for r in rows),
+                    arrival=self._arrivals))
+
+    def _select(self) -> tuple[list[_Group], list[_Group]]:
+        """Order active groups by urgency; return (stepped, skipped).
+
+        Urgency key: effective priority desc (priority + skipped //
+        aging_ticks, so any group skipped long enough eventually outranks
+        everything at a fixed priority -- no starvation), then earliest
+        absolute deadline, then admission order. ``steps_per_tick=None``
+        steps every group (ordering = dispatch order only)."""
+        order = sorted(
+            self._active,
+            key=lambda g: (-(g.priority + g.skipped // self.aging_ticks),
+                           g.deadline, g.arrival))
+        if self.steps_per_tick is None:
+            return order, []
+        return order[:self.steps_per_tick], order[self.steps_per_tick:]
+
+    def _compact(self, g: _Group, live: list[int]) -> None:
+        """Re-pack surviving rows into a smaller (sig, batch, seq_len) bucket.
+
+        Gathers plan rows and state rows whole (coefficients, iterate, eps
+        history, per-request key chains), so the surviving requests' samples
+        are bit-identical to an uncompacted solve; only the executor changes,
+        to the cached one for the smaller batch (compiled on first need,
+        charged to this group's ``compile_s``). Group urgency is recomputed
+        from the SURVIVORS so a retired urgent row's priority/deadline does
+        not keep preempting other groups on behalf of best-effort leftovers."""
+        g.plan = take_rows(g.plan, live)
+        g.state = SAMPLER.take_state_rows(g.state, live)
+        g.rows = [g.rows[i] for i in live]
+        g.n_steps = max(r.n_steps for r in g.rows)
+        g.priority = max(r.req.priority for r in g.rows)
+        g.deadline = min(r.deadline for r in g.rows)
+        g.fn, compile_s = self._executor(g.sig, g.plan, g.state)
+        g.compile_s += compile_s
 
     @property
     def busy(self) -> bool:
         """True while any request is pending admission or mid-solve."""
         return bool(self._pending or self._active)
+
+    def reset(self) -> None:
+        """Abort all pending and in-flight work (queues cleared; the plan and
+        executor caches survive -- they are pure and reusable). This is the
+        recovery point after a failed tick leaves group state unreliable:
+        the driver calls it before failing the affected requests' futures."""
+        self._pending.clear()
+        self._active.clear()
 
     @property
     def num_executors(self) -> int:
@@ -273,17 +427,28 @@ class DiffusionServeEngine:
         return len(self._compiled)
 
     def tick(self, *, on_step=None, stream_decode: bool = False) -> list[Result]:
-        """One scheduler tick: admit pending requests, advance every active
-        group one solver step, emit Results for groups that finished.
+        """One scheduler tick: admit pending requests, advance the selected
+        groups one solver step each, emit Results for rows that finished.
 
-        All group steps are dispatched before any is blocked on, so on async
-        backends the device overlaps them; each group's ``solve_s`` is the
-        elapsed time from its dispatch to its step being ready (what a client
-        of that group observes)."""
+        All selected group steps are dispatched before any is blocked on, so
+        on async backends the device overlaps them; each group's ``solve_s``
+        is the elapsed time from its dispatch to its step being ready (what a
+        client of that group observes). A row's Result is emitted from the
+        tick its OWN step count completes -- in a ragged group that is before
+        the group drains -- with ``latency_s`` = the group's solve time so
+        far and the row's true ``nfe``. Groups with only finished rows are
+        retired; with ``compaction`` on, partially-finished groups shrink to
+        their survivors."""
         self._admit()
+        self.ticks += 1
         finished: list[Result] = []
+        stepped, skipped = self._select()
+        for g in skipped:
+            g.skipped += 1
         dispatched = []
-        for g in list(self._active):
+        for g in stepped:
+            g.skipped = 0
+            self.wasted_row_steps += sum(r.done for r in g.rows)
             t0 = time.perf_counter()
             g.state = g.fn(self.params, g.plan, jnp.int32(g.k), g.state)
             dispatched.append((g, t0))
@@ -291,21 +456,34 @@ class DiffusionServeEngine:
             jax.block_until_ready(g.state.x)
             g.solve_s += time.perf_counter() - t0
             g.k += 1
+            newly = [i for i, r in enumerate(g.rows)
+                     if not r.done and r.n_steps == g.k]
+            stream_toks = None
+            if on_step is not None and stream_decode:
+                stream_toks = np.asarray(DLM.decode_tokens(
+                    self.params, self.cfg, g.state.x))
             if on_step is not None:
-                toks = None
-                if stream_decode:
-                    toks = np.asarray(DLM.decode_tokens(self.params, self.cfg,
-                                                        g.state.x))
-                on_step(StepEvent(uids=tuple(r.uid for r in g.reqs), k=g.k,
-                                  n_steps=g.n_steps, tokens=toks))
-            if g.k >= g.n_steps:
-                self._active.remove(g)
-                toks = np.asarray(DLM.decode_tokens(self.params, self.cfg,
-                                                    g.state.x))
-                for i, r in enumerate(g.reqs):
-                    finished.append(Result(r.uid, toks[i], g.solve_s,
-                                           nfe=g.plan.nfe,
+                on_step(StepEvent(uids=g.uids, k=g.k, n_steps=g.n_steps,
+                                  tokens=stream_toks,
+                                  row_steps=tuple(r.n_steps for r in g.rows)))
+            if newly:
+                # decode ONLY the finished rows unless a full partial decode
+                # already exists (ragged groups would otherwise pay one
+                # full-batch decode per distinct member NFE)
+                new_toks = stream_toks[newly] if stream_toks is not None \
+                    else np.asarray(DLM.decode_tokens(
+                        self.params, self.cfg,
+                        g.state.x[jnp.asarray(newly)]))
+                for j, i in enumerate(newly):
+                    g.rows[i].done = True
+                    finished.append(Result(g.rows[i].req.uid, new_toks[j],
+                                           g.solve_s, nfe=g.rows[i].nfe,
                                            compile_s=g.compile_s))
+            live = [i for i, r in enumerate(g.rows) if not r.done]
+            if not live:
+                self._active.remove(g)
+            elif self.compaction and len(live) < len(g.rows):
+                self._compact(g, live)
         return finished
 
     def serve(self, requests: list[Request], *, on_step=None,

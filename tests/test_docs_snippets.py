@@ -1,0 +1,41 @@
+"""Execute the README's fenced ``python`` code blocks so the documented
+quickstarts can never rot: every block runs top-to-bottom in one shared
+namespace (like a reader pasting them into one session) and any failure —
+import error, API drift, a broken headline assertion — fails CI's docs job.
+
+Blocks fenced with any other language (``bash`` etc.) are skipped. A block
+can opt out by being preceded by an HTML comment ``<!-- docs-test: skip -->``
+(none currently do).
+"""
+import pathlib
+import re
+
+import pytest
+
+# dedicated CI job (and still part of the full tier-1 run); excluded from the
+# fast tier so the two jobs don't duplicate the README execution
+pytestmark = pytest.mark.docs
+
+README = pathlib.Path(__file__).resolve().parent.parent / "README.md"
+
+_FENCE = re.compile(
+    r"(?P<skip><!--\s*docs-test:\s*skip\s*-->\s*\n)?"
+    r"```python\n(?P<body>.*?)```", re.DOTALL)
+
+
+def _python_blocks(text: str):
+    return [m.group("body") for m in _FENCE.finditer(text)
+            if not m.group("skip")]
+
+
+def test_readme_python_snippets_execute():
+    text = README.read_text()
+    blocks = _python_blocks(text)
+    # the README documents (at least) the sampling and serving quickstarts
+    assert len(blocks) >= 2, "README lost its executable quickstart blocks"
+    ns: dict = {"__name__": "readme_snippets"}
+    for i, block in enumerate(blocks):
+        code = compile(block, f"README.md:block[{i}]", "exec")
+        exec(code, ns)  # noqa: S102 - executing our own documentation
+    # the serving quickstart must actually have produced tokens
+    assert ns["tokens"].shape == (16,)

@@ -1,0 +1,159 @@
+"""Async ServeDriver transport contracts: threaded submit with per-request
+event streams and futures, asyncio submission, per-request validation-error
+delivery, bitwise parity with the synchronous engine, and the HTTP-ish
+NDJSON transport in ``repro.launch.serve``."""
+import asyncio
+import json
+import threading
+import urllib.request
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.launch.serve import make_http_server
+from repro.models import transformer as T
+from repro.serving.driver import ServeDriver
+from repro.serving.engine import DiffusionServeEngine, Request
+
+
+@pytest.fixture(scope="module")
+def diff_setup():
+    cfg = get_config("gemma_2b").reduced().with_(objective="diffusion")
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    return params, cfg
+
+
+def test_driver_streams_and_matches_sync_engine(diff_setup):
+    """Concurrent submits through the driver produce per-request event
+    streams with the request's OWN progress (even in a ragged group) and
+    final samples bitwise-equal to a synchronous solo serve."""
+    params, cfg = diff_setup
+    eng = DiffusionServeEngine(params, cfg)
+    with ServeDriver(eng) as drv:
+        h1 = drv.submit(Request(uid=0, seq_len=8, nfe=3, solver="ddim", seed=1))
+        h2 = drv.submit(Request(uid=1, seq_len=8, nfe=6, solver="ddim", seed=2))
+        evs = list(h1.events())
+        assert [e.k for e in evs] == [1, 2, 3]          # own step count, not
+        assert all(e.n_steps == 3 and e.uids == (0,) for e in evs)  # group max
+        r1, r2 = h1.result(), h2.result()
+    assert (r1.nfe, r2.nfe) == (3, 6)
+    sync = DiffusionServeEngine(params, cfg)
+    s1 = sync.serve([Request(uid=0, seq_len=8, nfe=3, solver="ddim", seed=1)])
+    s2 = sync.serve([Request(uid=1, seq_len=8, nfe=6, solver="ddim", seed=2)])
+    np.testing.assert_array_equal(r1.tokens, s1[0].tokens)
+    np.testing.assert_array_equal(r2.tokens, s2[0].tokens)
+
+
+def test_driver_async_submission(diff_setup):
+    """submit_async handles support ``async for`` event iteration and
+    awaitable results on an asyncio loop while the scheduler thread runs."""
+    params, cfg = diff_setup
+    eng = DiffusionServeEngine(params, cfg)
+
+    async def go(drv):
+        h = await drv.submit_async(
+            Request(uid=7, seq_len=8, nfe=4, solver="euler", seed=3))
+        ks = [ev.k async for ev in h]
+        return ks, await h.result()
+
+    with ServeDriver(eng) as drv:
+        ks, res = asyncio.run(go(drv))
+    assert ks == [1, 2, 3, 4] and res.nfe == 4 and res.tokens.shape == (8,)
+
+
+def test_driver_validation_error_is_per_request(diff_setup):
+    """A bad request fails on ITS handle (the engine's validation exception,
+    delivered through the future); concurrent good requests are unaffected
+    -- unlike the synchronous serve()'s all-or-nothing batch contract."""
+    params, cfg = diff_setup
+    eng = DiffusionServeEngine(params, cfg)
+    with ServeDriver(eng) as drv:
+        good = drv.submit(Request(uid=0, seq_len=8, nfe=3, solver="ddim",
+                                  seed=0))
+        bad = drv.submit(Request(uid=1, seq_len=8, nfe=3, solver="nope"))
+        with pytest.raises(ValueError, match="unknown solver"):
+            bad.result(timeout=30)
+        assert list(bad.events()) == []               # stream closed, empty
+        assert good.result().tokens.shape == (8,)
+        with pytest.raises(ValueError, match="eta"):
+            drv.submit(Request(uid=2, seq_len=8, nfe=3,
+                               solver="ddim_eta")).result(timeout=30)
+
+
+def test_driver_survives_tick_crash(diff_setup):
+    """If a tick raises, the scheduler thread must not die silently: every
+    in-flight future fails with the error, the engine queues are reset, and
+    the driver keeps serving later submissions."""
+    params, cfg = diff_setup
+    eng = DiffusionServeEngine(params, cfg)
+    real_tick = eng.tick
+    boom = {"armed": True}
+
+    def exploding_tick(**kw):
+        if boom["armed"]:
+            boom["armed"] = False
+            raise RuntimeError("device fell over")
+        return real_tick(**kw)
+
+    eng.tick = exploding_tick
+    with ServeDriver(eng) as drv:
+        h = drv.submit(Request(uid=0, seq_len=8, nfe=3, solver="ddim", seed=0))
+        with pytest.raises(RuntimeError, match="fell over"):
+            h.result(timeout=60)
+        assert list(h.events()) == []                 # stream closed
+        # driver still alive and serving
+        h2 = drv.submit(Request(uid=1, seq_len=8, nfe=3, solver="ddim", seed=0))
+        assert h2.result(timeout=120).tokens.shape == (8,)
+
+
+def test_driver_rejects_duplicate_inflight_uid(diff_setup):
+    params, cfg = diff_setup
+    eng = DiffusionServeEngine(params, cfg)
+    with ServeDriver(eng) as drv:
+        h = drv.submit(Request(uid=5, seq_len=8, nfe=3, solver="ddim", seed=0))
+        with pytest.raises(ValueError, match="already"):
+            drv.submit(Request(uid=5, seq_len=8, nfe=3, solver="ddim", seed=1))
+        h.result()
+        # uid is reusable once the request completed
+        drv.submit(Request(uid=5, seq_len=8, nfe=3, solver="ddim",
+                           seed=1)).result()
+
+
+def test_http_transport_roundtrip(diff_setup):
+    """POST /v1/generate against the HTTP-ish transport: non-streaming JSON
+    result (bitwise-equal to the driver path) and NDJSON streaming with one
+    step line per solver step followed by the result line."""
+    params, cfg = diff_setup
+    eng = DiffusionServeEngine(params, cfg)
+    with ServeDriver(eng) as drv:
+        server = make_http_server(drv, 0)           # port 0: OS-assigned
+        port = server.server_address[1]
+        t = threading.Thread(target=server.serve_forever, daemon=True)
+        t.start()
+        try:
+            url = f"http://127.0.0.1:{port}/v1/generate"
+            body = {"seq_len": 8, "nfe": 3, "solver": "ddim", "seed": 1}
+            out = json.loads(urllib.request.urlopen(
+                urllib.request.Request(url, data=json.dumps(body).encode()),
+                timeout=120).read())
+            assert out["nfe"] == 3 and len(out["tokens"]) == 8
+
+            lines = urllib.request.urlopen(
+                urllib.request.Request(url, data=json.dumps(
+                    {**body, "stream": True}).encode()),
+                timeout=120).read().decode().strip().split("\n")
+            objs = [json.loads(ln) for ln in lines]
+            assert [o["event"] for o in objs] == ["step"] * 3 + ["result"]
+            assert [o["k"] for o in objs[:-1]] == [1, 2, 3]
+            assert objs[-1]["tokens"] == out["tokens"]   # same seed, same sample
+
+            # engine-side validation surfaces as NDJSON error event
+            lines = urllib.request.urlopen(
+                urllib.request.Request(url, data=json.dumps(
+                    {**body, "solver": "nope", "stream": True}).encode()),
+                timeout=120).read().decode().strip().split("\n")
+            assert json.loads(lines[-1])["event"] == "error"
+        finally:
+            server.shutdown()

@@ -274,6 +274,63 @@ def test_stack_plans_rejects_mismatched_signatures():
         stack_plans([stack_plans([make_plan("ddim", SDE, TS)])])
 
 
+# ---------------------------------------- ragged plans: pad / family / gather
+@pytest.mark.parametrize("name", ["ddim", "tab3", "rho_rk4", "pndm", "em"])
+def test_pad_plan_prefix_bitwise_and_family(name):
+    """Padding preserves the original steps bit-for-bit (the padded solve's
+    first n steps equal the unpadded solve), keeps padded steps finite, and
+    makes same-family/different-NFE plans stackable. rho_rk4 guards the
+    registry: its per-stage ``b`` weights share a length with a 4-step grid
+    and must NOT be treated as a step axis."""
+    from repro.core import pad_plan
+    n1, n2 = (5, 9) if name == "pndm" else (4, 8)
+    p1 = make_plan(name, SDE, get_timesteps(SDE, n1, "quadratic"), **_kw(name))
+    p2 = make_plan(name, SDE, get_timesteps(SDE, n2, "quadratic"), **_kw(name))
+    assert p1.family == p2.family
+    assert p1.signature != p2.signature
+    padded = pad_plan(p1, p2.n_steps)
+    assert padded.signature == p2.signature and padded.nfe == p1.nfe
+    eps, xT = _problem(batch=2)
+    st_a, st_b = init_state(p1, xT, KEY), init_state(padded, xT, KEY)
+    for k in range(p1.n_steps):
+        st_a = step(p1, k, st_a, eps)
+        st_b = step(padded, k, st_b, eps)
+    np.testing.assert_array_equal(np.asarray(st_a.x), np.asarray(st_b.x))
+    for k in range(p1.n_steps, padded.n_steps):   # inert region stays finite
+        st_b = step(padded, k, st_b, eps)
+    assert np.all(np.isfinite(np.asarray(st_b.x)))
+    stacked = stack_plans([padded, p2])
+    assert stacked.batch == 2 and stacked.nfe == max(p1.nfe, p2.nfe)
+
+
+def test_take_rows_and_state_rows_bit_exact_mid_solve():
+    """Mid-solve compaction primitive: gathering rows of a stacked stochastic
+    solve and continuing yields bitwise the same per-request samples as the
+    uncompacted stack (key chains move whole)."""
+    from repro.core import take_rows, take_state_rows
+    eps, _ = _problem(d=4)
+    plans = [make_plan("em", SDE, TS)] * 3
+    keys = jnp.stack([jax.random.PRNGKey(s) for s in (3, 4, 5)])
+    xT = jax.vmap(lambda kk: jax.random.normal(kk, (4,)))(
+        jnp.stack([jax.random.PRNGKey(s) for s in (13, 14, 15)]))
+    full = stack_plans(plans)
+    st_full = init_state(full, xT, keys)
+    st_cmp = init_state(full, xT, keys)
+    cmp_plan = full
+    for k in range(full.n_steps):
+        st_full = step(full, k, st_full, eps)
+        st_cmp = step(cmp_plan, k, st_cmp, eps)
+        if k == 2:                                  # compact away row 1
+            cmp_plan = take_rows(cmp_plan, [0, 2])
+            st_cmp = take_state_rows(st_cmp, [0, 2])
+    np.testing.assert_array_equal(np.asarray(st_full.x)[[0, 2]],
+                                  np.asarray(st_cmp.x))
+    with pytest.raises(ValueError, match="stacked"):
+        take_rows(make_plan("ddim", SDE, TS), [0])
+    with pytest.raises(ValueError, match="non-empty"):
+        take_state_rows(st_cmp, [])
+
+
 def test_stacked_state_validation():
     plan = stack_plans([make_plan("em", SDE, TS)] * 2)
     eps, xT = _problem(batch=2)

@@ -230,6 +230,128 @@ def test_invalid_request_cannot_strand_queued_work(diff_setup):
     assert [r.uid for r in res] == [3]        # no stale strays drained in
 
 
+# ---------------------------------------- ragged groups / compaction / EDF
+def _ragged_reqs():
+    """One family bucket (ddim/euler, C width 1) with three NFE budgets."""
+    return [Request(uid=0, seq_len=16, nfe=3, solver="ddim", seed=1),
+            Request(uid=1, seq_len=16, nfe=6, solver="ddim", seed=2),
+            Request(uid=2, seq_len=16, nfe=6, solver="euler", seed=3),
+            Request(uid=3, seq_len=16, nfe=9, solver="ddim", seed=4)]
+
+
+def test_ragged_compaction_bitwise_vs_solo(diff_setup):
+    """A ragged-NFE group with compaction produces bitwise-identical samples
+    per request vs. solo solves: padding leaves each row's true steps
+    untouched, and compaction row-gathers coefficients, state and key chains
+    whole. The shrinking batches land in the shared executor cache."""
+    params, cfg = diff_setup
+    eng = DiffusionServeEngine(params, cfg, compaction=True)
+    res = {r.uid: r for r in eng.serve(_ragged_reqs())}
+    assert len(res) == 4
+    assert eng.wasted_row_steps == 0           # compaction: no dead-row steps
+    # one ragged group of 4 compacted to 3 (after nfe=3 retires) then 1
+    assert sorted(k[1] for k in eng._compiled) == [1, 3, 4]
+    # true per-request NFE survives padding (group plan was padded to 9)
+    assert {u: r.nfe for u, r in res.items()} == {0: 3, 1: 6, 2: 6, 3: 9}
+    # ragged rows finish EARLY: the nfe=3 row's Result is emitted mid-group
+    assert res[0].latency_s < res[3].latency_s
+    solo = DiffusionServeEngine(params, cfg)
+    for q in _ragged_reqs():
+        s = solo.serve([q])[0]
+        np.testing.assert_array_equal(s.tokens, res[q.uid].tokens)
+
+
+def test_compaction_reduces_wasted_row_steps(diff_setup):
+    """Without compaction a ragged group burns one step per retired row per
+    tick (here: 6 + 3 + 3 = 12); with compaction, zero. Samples must be
+    bitwise identical either way."""
+    params, cfg = diff_setup
+    off = DiffusionServeEngine(params, cfg, compaction=False)
+    res_off = {r.uid: r.tokens for r in off.serve(_ragged_reqs())}
+    assert off.wasted_row_steps == 12
+    on = DiffusionServeEngine(params, cfg, compaction=True)
+    res_on = {r.uid: r.tokens for r in on.serve(_ragged_reqs())}
+    assert on.wasted_row_steps == 0
+    for uid in res_off:
+        np.testing.assert_array_equal(res_off[uid], res_on[uid])
+
+
+def test_deadline_request_preempts_older_work(diff_setup):
+    """EDF under a throttled scheduler (steps_per_tick=1): a deadline-tight
+    request submitted AFTER an in-flight best-effort group is stepped ahead
+    of it every tick until it completes -- and the old work still drains."""
+    params, cfg = diff_setup
+    eng = DiffusionServeEngine(params, cfg, steps_per_tick=1,
+                               aging_ticks=1000)
+    events = []
+    eng.submit(Request(uid=0, seq_len=16, nfe=6, solver="tab1", seed=0))
+    done = eng.tick(on_step=events.append)          # A in flight, k=1
+    eng.submit(Request(uid=1, seq_len=16, nfe=3, solver="tab1", seed=1,
+                       deadline_s=0.05))
+    while eng.busy:
+        done += eng.tick(on_step=events.append)
+    # B (deadline) takes every tick from admission until it finishes
+    assert [e.uids[0] for e in events] == [0, 1, 1, 1, 0, 0, 0, 0, 0]
+    assert [r.uid for r in done] == [1, 0]          # B finishes first
+
+
+def test_compaction_recomputes_group_urgency(diff_setup):
+    """When the urgent row of a ragged group retires, the surviving
+    best-effort rows must NOT inherit its priority/deadline: a mid-priority
+    newcomer preempts the compacted leftovers (no priority inversion)."""
+    params, cfg = diff_setup
+    eng = DiffusionServeEngine(params, cfg, steps_per_tick=1,
+                               aging_ticks=1000)
+    eng.submit(Request(uid=0, seq_len=16, nfe=3, solver="ddim", seed=0,
+                       priority=2, deadline_s=0.05))
+    eng.submit(Request(uid=1, seq_len=16, nfe=9, solver="ddim", seed=1))
+    events, done = [], []
+    for _ in range(3):                    # urgent row finishes and retires
+        done += eng.tick(on_step=events.append)
+    assert [r.uid for r in done] == [0]
+    eng.submit(Request(uid=2, seq_len=16, nfe=3, solver="ddim", seed=2,
+                       priority=1))
+    while eng.busy:
+        done += eng.tick(on_step=events.append)
+    # the newcomer ran ahead of the leftover best-effort row every tick
+    assert [e.uids for e in events[3:6]] == [(2,), (2,), (2,)]
+    assert [r.uid for r in done] == [0, 2, 1]
+
+
+def test_engine_rejects_invalid_shapes_at_submit(diff_setup):
+    """seq_len/nfe validation happens at submit, before anything can reach a
+    scheduler tick (a negative seq_len used to blow up inside tick() -- fatal
+    for a driver thread)."""
+    params, cfg = diff_setup
+    eng = DiffusionServeEngine(params, cfg)
+    with pytest.raises(ValueError, match="seq_len"):
+        eng.submit(Request(uid=0, seq_len=-1, nfe=3, solver="ddim"))
+    with pytest.raises(ValueError, match="nfe"):
+        eng.submit(Request(uid=0, seq_len=8, nfe=0, solver="ddim"))
+    assert not eng.busy
+
+
+def test_starvation_aging_boosts_skipped_group(diff_setup):
+    """A best-effort group facing persistent higher-priority work is boosted
+    one effective-priority level per aging_ticks skipped ticks, so it makes
+    progress BEFORE the high-priority stream drains (no starvation)."""
+    params, cfg = diff_setup
+    eng = DiffusionServeEngine(params, cfg, steps_per_tick=1, aging_ticks=2)
+    events = []
+    eng.submit(Request(uid=0, seq_len=16, nfe=4, solver="tab1", seed=0))
+    done = eng.tick(on_step=events.append)          # A steps once
+    eng.submit(Request(uid=1, seq_len=16, nfe=8, solver="tab1", seed=1,
+                       priority=2))
+    while eng.busy:
+        done += eng.tick(on_step=events.append)
+    order = [e.uids[0] for e in events]
+    b_span = (order.index(1), len(order) - 1 - order[::-1].index(1))
+    # aging got A at least one step strictly inside B's run ...
+    assert 0 in order[b_span[0]:b_span[1]], order
+    # ... while B (higher priority) still finished first
+    assert [r.uid for r in done] == [1, 0]
+
+
 def test_admission_splits_oversized_buckets(diff_setup):
     """Buckets larger than max_group split into multiple stacked groups, each
     with its own executor cache entry keyed on its batch size."""
