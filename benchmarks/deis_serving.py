@@ -20,13 +20,27 @@ Three measurements on a reduced backbone:
     bitwise-identical per-request samples, and that the measured (warm)
     pass runs with ZERO recompilation -- compaction's shrunken batch sizes
     included, because they land in the same (signature, batch, seq_len)
-    executor cache.
+    executor cache;
+  * a SHARDED mixed-traffic run on a forced 8-device host mesh (subprocess:
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` must be set
+    before jax imports). Ragged request waves -- including stochastic rows
+    with distinct seeds and a 12-request burst whose 16-row group compacts
+    to 8 mid-flight UNDER sharding -- run through the request-axis sharded
+    engine and through the single-device engine; the child asserts the two
+    are bitwise identical per request and that the sharded warm pass runs
+    with ZERO recompilation (compaction's shrunken multiples land in the
+    same mesh-keyed (signature, batch, seq_len, mesh) executor cache).
 """
+import json
+import os
+import subprocess
+import sys
 import time
 
 import jax
 import numpy as np
 
+import repro
 from repro.configs.base import get_config
 from repro.models import transformer as T
 from repro.serving.engine import DiffusionServeEngine, Request
@@ -167,6 +181,75 @@ def _ragged_priority_rows(params, cfg, quick: bool):
     return rows
 
 
+# ------------------------------------------------ sharded (8-device) section
+# Runs in a child process because the forced host-device count only takes
+# effect before jax is imported (this process already has 1 CPU device).
+_SHARDED_CHILD = """
+import json, time
+import jax, numpy as np
+assert jax.device_count() == 8, jax.device_count()
+from repro.configs.base import get_config
+from repro.models import transformer as T
+from repro.serving.engine import DiffusionServeEngine, Request
+from repro.launch.mesh import make_request_mesh
+
+QUICK = %(quick)r
+cfg = get_config("gemma_2b").reduced().with_(objective="diffusion")
+params = T.init_params(cfg, jax.random.PRNGKey(0))
+
+# mixed traffic: a ragged deterministic burst (compacts 16 -> 8 mid-flight
+# under sharding), plus a stochastic wave with distinct per-request seeds
+reqs = [Request(uid=i, seq_len=16, nfe=[4, 8][i %% 2], solver="ddim", seed=i)
+        for i in range(6 if QUICK else 12)]
+reqs += [Request(uid=100 + i, seq_len=16, nfe=4, solver="em", seed=50 + i)
+         for i in range(2 if QUICK else 3)]
+
+base = DiffusionServeEngine(params, cfg, max_group=16)
+want = {r.uid: r.tokens for r in base.serve(list(reqs))}
+
+eng = DiffusionServeEngine(params, cfg, max_group=16, mesh=make_request_mesh())
+eng.serve(list(reqs))                       # cold: compile every mesh bucket
+executors = eng.num_executors
+t0 = time.perf_counter()
+res = eng.serve(list(reqs))                 # warm, measured
+dt = time.perf_counter() - t0
+got = {r.uid: r.tokens for r in res}
+
+assert eng.num_executors == executors, "sharded warm serve recompiled"
+assert all(r.compile_s == 0.0 for r in res)
+batches = sorted({k[1] for k in eng._compiled})
+assert all(b %% 8 == 0 for b in batches), batches   # groups place evenly
+assert want.keys() == got.keys()
+for uid in want:                            # bitwise vs single-device path
+    np.testing.assert_array_equal(got[uid], want[uid])
+print("ROWS " + json.dumps([{
+    "table": "deis_serving", "solver": "sharded_8dev",
+    "requests": len(reqs), "devices": jax.device_count(),
+    "executor_batches": "/".join(str(b) for b in batches),
+    "bitwise_vs_1dev": True, "warm_recompiles": 0,
+    "us_per_request": round(dt / len(reqs) * 1e6, 1),
+    "seq_per_s": round(len(reqs) / dt, 2)}]))
+"""
+
+
+def _sharded_rows(quick: bool):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["JAX_PLATFORMS"] = "cpu"
+    # repro may be a namespace package (no __init__), so resolve via __path__
+    pkg_root = os.path.dirname(list(repro.__path__)[0])
+    env["PYTHONPATH"] = os.pathsep.join(
+        [pkg_root] + env.get("PYTHONPATH", "").split(os.pathsep))
+    out = subprocess.run(
+        [sys.executable, "-c", _SHARDED_CHILD % {"quick": quick}],
+        capture_output=True, text=True, timeout=1800, env=env)
+    if out.returncode != 0:
+        raise RuntimeError(
+            f"sharded benchmark child failed:\n{out.stdout}\n{out.stderr}")
+    line = [ln for ln in out.stdout.splitlines() if ln.startswith("ROWS ")][-1]
+    return json.loads(line[len("ROWS "):])
+
+
 def run(quick: bool = False):
     cfg = get_config("gemma_2b").reduced().with_(objective="diffusion")
     params = T.init_params(cfg, jax.random.PRNGKey(0))
@@ -174,4 +257,5 @@ def run(quick: bool = False):
     rows = _throughput_rows(eng, quick)
     rows.append(_mixed_traffic_row(eng, quick))
     rows += _ragged_priority_rows(params, cfg, quick)
+    rows += _sharded_rows(quick)
     return rows

@@ -17,34 +17,30 @@ per-step exponential-integrator coefficients into an immutable
 
 Plans are jit/vmap/pjit-traced arguments: every plan with the same
 ``signature`` (method tag + coefficient shapes) shares one compiled
-executor. The class-based API (``make_solver``, ``ABSolver`` ...) remains as
-thin deprecation shims over plans; see ``repro/core/solvers.py`` for the
-migration map.
+executor. The legacy class-based API is gone; ``make_solver`` survives only
+as a deprecated alias for ``make_plan`` (see ``repro/core/solvers.py`` for
+the migration map).
 """
 from .sde import SDE, VPSDE, VESDE, SubVPSDE, get_sde
 from .schedules import get_timesteps, SCHEDULES
 from .coeffs import ab_coefficients, ddim_coefficients_vp, naive_ei_coefficients, AB_WEIGHTS
-from .plan import (SolverPlan, make_plan, pad_plan, plan_ab, plan_rk,
-                   plan_ddim, plan_euler, plan_em, plan_ipndm, plan_pndm,
-                   solver_stages, stack_plans, take_rows)
-from .sampler import (Hooks, SamplerState, init_state, sample, step,
-                      take_state_rows)
-from .solvers import (ABSolver, RKSolver, DPMSolver2, EulerSolver, EMSolver,
-                      DDIMSolver, IPNDMSolver, PNDMSolver, make_solver,
-                      SOLVER_NAMES, SolverBase)
+from .plan import (SolverPlan, inert_row, make_plan, pad_plan, plan_ab,
+                   plan_rk, plan_ddim, plan_euler, plan_em, plan_ipndm,
+                   plan_pndm, solver_stages, stack_plans, take_rows)
+from .sampler import (Hooks, SamplerState, init_state, sample, shard_state,
+                      step, take_state_rows)
+from .solvers import make_solver, SOLVER_NAMES
 from .likelihood import nll_bits_per_dim
 
 __all__ = [
     "SDE", "VPSDE", "VESDE", "SubVPSDE", "get_sde",
     "get_timesteps", "SCHEDULES",
     "ab_coefficients", "ddim_coefficients_vp", "naive_ei_coefficients", "AB_WEIGHTS",
-    "SolverPlan", "make_plan", "pad_plan", "plan_ab", "plan_rk", "plan_ddim",
-    "plan_euler", "plan_em", "plan_ipndm", "plan_pndm", "solver_stages",
-    "stack_plans", "take_rows",
-    "Hooks", "SamplerState", "init_state", "sample", "step",
+    "SolverPlan", "inert_row", "make_plan", "pad_plan", "plan_ab", "plan_rk",
+    "plan_ddim", "plan_euler", "plan_em", "plan_ipndm", "plan_pndm",
+    "solver_stages", "stack_plans", "take_rows",
+    "Hooks", "SamplerState", "init_state", "sample", "shard_state", "step",
     "take_state_rows",
-    "ABSolver", "RKSolver", "DPMSolver2", "EulerSolver", "EMSolver",
-    "DDIMSolver", "IPNDMSolver", "PNDMSolver", "make_solver", "SOLVER_NAMES",
-    "SolverBase",
+    "make_solver", "SOLVER_NAMES",
     "nll_bits_per_dim",
 ]

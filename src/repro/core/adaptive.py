@@ -20,9 +20,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .plan import _f64
 from .sampler import SamplerState
 from .sde import SDE
-from .solvers import SolverBase, _f64
 
 
 @dataclasses.dataclass
@@ -41,19 +41,25 @@ class AdaptiveResult:
         return self.state.x
 
 
-class AdaptiveRK23(SolverBase):
+class AdaptiveRK23:
     """Embedded Bogacki-Shampine 3(2) on the rho-ODE with adaptive steps.
 
     3 fresh evals per attempted step (FSAL reuse on accept). Not jittable
     end-to-end by design -- the control flow is host-side so that NFE
     accounting is exact (this is an analysis tool, not a production sampler;
     the paper's point is precisely that one should NOT serve with this).
+    Standalone on purpose: it is the one solver that is NOT a
+    :class:`~repro.core.plan.SolverPlan` (no fixed grid exists to
+    precompute), so it never rode the legacy ``SolverBase`` machinery's
+    plan delegation -- only its attribute layout, inlined here when the
+    class shims were removed.
     """
 
     def __init__(self, sde: SDE, rtol: float = 1e-2, atol: float = 1e-2,
                  max_steps: int = 1000, name: str = "rk23_adaptive"):
-        ts = _f64(np.array([sde.T, sde.t0]))
-        super().__init__(name, -1, sde, ts)
+        self.name, self.nfe = name, -1     # nfe is data-dependent (see solve)
+        self.sde = sde
+        self.ts = _f64(np.array([sde.T, sde.t0]))
         self.rtol, self.atol, self.max_steps = rtol, atol, max_steps
 
     def solve(self, eps_fn, x_T) -> AdaptiveResult:

@@ -23,7 +23,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .sde import SDE
-from .solvers import _TABLEAUS, _f64
+from .plan import _TABLEAUS, _f64
 
 
 def _divergence_exact(fn, y):

@@ -228,7 +228,7 @@ def pad_plan(plan: SolverPlan, n_steps: int) -> SolverPlan:
     return dataclasses.replace(plan, coeffs=coeffs, ts=edge(plan.ts))
 
 
-def take_rows(plan: SolverPlan, rows) -> SolverPlan:
+def take_rows(plan: SolverPlan, rows, shardings=None) -> SolverPlan:
     """Row-gather a stacked plan: keep requests ``rows`` (in that order).
 
     ``rows`` is a host-side index sequence into the leading request axis.
@@ -238,6 +238,12 @@ def take_rows(plan: SolverPlan, rows) -> SolverPlan:
     (the state half is :func:`repro.core.sampler.take_state_rows`). The
     result is still a stacked plan (even for a single surviving row) with the
     same signature family at the new, smaller batch.
+
+    ``shardings`` (a plan-shaped tree of ``jax.sharding.Sharding``, e.g. from
+    :func:`repro.sharding.rules.plan_specs` at the NEW batch size) makes the
+    gather *sharding-preserving*: the gathered leaves are committed to those
+    placements, so feeding the compacted plan to an AOT-compiled sharded
+    executor never triggers a resharding recompile mid-flight.
     """
     if not plan.stacked:
         raise ValueError("take_rows requires a stacked plan")
@@ -245,9 +251,36 @@ def take_rows(plan: SolverPlan, rows) -> SolverPlan:
     if idx.ndim != 1 or idx.size == 0:
         raise ValueError(f"rows must be a non-empty 1-D index sequence, got "
                          f"shape {idx.shape}")
-    return dataclasses.replace(
+    out = dataclasses.replace(
         plan, coeffs={k: v[idx] for k, v in plan.coeffs.items()},
         ts=plan.ts[idx])
+    if shardings is not None:
+        out = jax.device_put(out, shardings)
+    return out
+
+
+def inert_row(plan: SolverPlan) -> SolverPlan:
+    """A same-signature plan whose every step is inert: structural filler.
+
+    Weight-like per-step coefficients (psi / C / s / h / A / stage_mu) are
+    zeroed, so the row's iterate update is the zero map and its noise scale
+    is zero; time-like and knot-like leaves (ts / mu / stage_t, and the
+    method-specific extras like PNDM's warm-up ratios) are copied so every
+    eps-network call on the row stays in-domain and finite. Sharded serving
+    uses this to round group sizes up to a multiple of the mesh's data-axis
+    size: pad rows stack with real requests (equal signature), place evenly,
+    compute garbage nobody reads, and retire for free.
+    """
+    if plan.stacked:
+        raise ValueError("inert_row operates on unstacked plans (build the "
+                         "filler, then stack with the real rows)")
+    coeffs = {}
+    for name, v in plan.coeffs.items():
+        if name in _PER_STEP_COEFFS and name not in _TIME_LIKE:
+            coeffs[name] = jnp.zeros_like(v)
+        else:
+            coeffs[name] = v
+    return dataclasses.replace(plan, coeffs=coeffs, nfe=0)
 
 
 def _mk(method: str, coeffs: dict, ts: np.ndarray, *, stochastic=False,

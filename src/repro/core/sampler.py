@@ -112,7 +112,7 @@ def init_state(plan: SolverPlan, x_T: Array, key: Optional[Array] = None) -> Sam
     return SamplerState(x=x_T, hist=hist, key=key, k=jnp.int32(0))
 
 
-def take_state_rows(state: SamplerState, rows) -> SamplerState:
+def take_state_rows(state: SamplerState, rows, shardings=None) -> SamplerState:
     """Row-gather a stacked solve's state: keep requests ``rows``, in order.
 
     Gathers ``x`` on axis 0, ``hist`` on axis 1 (its layout is
@@ -123,13 +123,48 @@ def take_state_rows(state: SamplerState, rows) -> SamplerState:
     remaining steps and noise draws it would have taken in the larger stack
     (or solo). This is the state half of mid-flight group compaction; the
     plan half is :func:`repro.core.plan.take_rows`.
+
+    ``shardings`` (a :class:`SamplerState` of ``jax.sharding.Sharding``, e.g.
+    built for the NEW batch size via :func:`repro.sharding.rules.state_specs`)
+    commits the gathered leaves to those placements, so a compacted state can
+    be fed straight to an AOT-compiled sharded executor without a resharding
+    recompile -- the sharded half of mid-flight compaction.
     """
     idx = jnp.asarray(rows, dtype=jnp.int32)
     if idx.ndim != 1 or idx.shape[0] == 0:
         raise ValueError(f"rows must be a non-empty 1-D index sequence, got "
                          f"shape {idx.shape}")
-    return SamplerState(x=state.x[idx], hist=state.hist[:, idx],
-                        key=state.key[idx], k=state.k)
+    out = SamplerState(x=state.x[idx], hist=state.hist[:, idx],
+                       key=state.key[idx], k=state.k)
+    if shardings is not None:
+        out = jax.device_put(out, shardings)
+    return out
+
+
+# ----------------------------------------------------- request-axis sharding
+def _request_shardings(plan: SolverPlan, state: SamplerState, mesh):
+    """(plan, state) NamedSharding trees for data-parallel stacked execution."""
+    from ..sharding.rules import plan_specs, state_specs, to_shardings
+    return (to_shardings(plan_specs(plan, mesh), mesh),
+            to_shardings(state_specs(state, mesh), mesh))
+
+
+def shard_state(plan: SolverPlan, state: SamplerState, mesh):
+    """Place a stacked (plan, state) pair over ``mesh``'s data axis.
+
+    Every request-axis leaf (x, eps history, the per-request key chains, and
+    the plan's per-row coefficient stacks) is committed to a
+    ``NamedSharding`` over the data-like axes; scalars replicate. Under a
+    trace the placement becomes a sharding constraint instead of a transfer,
+    so the same helper serves eager callers and jitted executors.
+    """
+    plan_sh, state_sh = _request_shardings(plan, state, mesh)
+    leaves = jax.tree_util.tree_leaves((plan, state))
+    if any(isinstance(l, jax.core.Tracer) for l in leaves):
+        place = jax.lax.with_sharding_constraint
+    else:
+        place = jax.device_put
+    return place(plan, plan_sh), place(state, state_sh)
 
 
 # ------------------------------------------------------------------ steps
@@ -292,21 +327,43 @@ _STEPPERS = {"ab": _step_ab, "rk": _step_rk, "pndm": _step_pndm}
 
 
 def step(plan: SolverPlan, k, state: SamplerState, eps_fn: EpsFn, *,
-         hooks: Optional[Hooks] = None) -> SamplerState:
-    """Advance one solver step: ``state`` at time ``ts[k]`` -> ``ts[k+1]``."""
+         hooks: Optional[Hooks] = None, mesh=None) -> SamplerState:
+    """Advance one solver step: ``state`` at time ``ts[k]`` -> ``ts[k+1]``.
+
+    ``mesh`` (a ``jax.sharding.Mesh`` with a data-like axis) places the
+    stacked request axis of every state/plan leaf with a ``NamedSharding``
+    before stepping -- data-parallel execution over requests. Sharding never
+    changes WHAT is computed (row ``i`` is row ``i``'s solo solve, bitwise);
+    serving's AOT executors instead jit with explicit in/out shardings and
+    pass no mesh here.
+    """
     plan = plan.astype(state.x.dtype)
+    if mesh is not None:
+        plan, state = shard_state(plan, state, mesh)
     return _STEPPERS[plan.method](plan, k, state, eps_fn, hooks or _DEFAULT_HOOKS)
 
 
 def sample(plan: SolverPlan, eps_fn: EpsFn, x_T: Array,
-           key: Optional[Array] = None, *, hooks: Optional[Hooks] = None):
+           key: Optional[Array] = None, *, hooks: Optional[Hooks] = None,
+           mesh=None):
     """Run the full solve from ``x_T`` at ``ts[0]`` down to ``ts[-1]``.
 
     Returns ``x_0``, or ``(x_0, trajectory)`` if ``hooks.record_trajectory``.
+
+    ``mesh`` shards a *stacked* solve's request axis over the mesh's
+    data-like axes before the loop; sharding propagates through the loop
+    body, so every step runs data-parallel over requests. Rows never mix:
+    in float32 (the serving dtype) results are bitwise identical to the
+    single-device solve; under float64 the SPMD-partitioned loop body may
+    fuse differently and differ by 1 ulp (the same caveat as ``sample`` vs
+    an eagerly dispatched ``step`` loop). Serving's per-step AOT executors
+    are bitwise on both paths.
     """
     hooks = hooks or _DEFAULT_HOOKS
     state = init_state(plan, x_T, key)
     plan = plan.astype(x_T.dtype)
+    if mesh is not None:
+        plan, state = shard_state(plan, state, mesh)
     n = plan.n_steps
     stepper = _STEPPERS[plan.method]
 

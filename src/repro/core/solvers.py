@@ -1,18 +1,19 @@
-"""Legacy class-based solver API -- thin deprecation shims over SolverPlans.
+"""Deprecated name-based solver factory (the class shims are gone).
 
 .. deprecated::
-    The class-per-solver API is superseded by the functional plan/step API:
+    The class-per-solver API (``ABSolver``, ``RKSolver``, ``DDIMSolver`` ...)
+    has been removed: nothing internal imported it any more, and every solver
+    is a pure :class:`~repro.core.plan.SolverPlan` applied by the single
+    executor in :mod:`repro.core.sampler`:
 
         from repro.core import make_plan, sample
         plan = make_plan("tab3", sde, ts)          # pure builder, pytree out
         x0 = sample(plan, eps_fn, x_T)             # single jit/vmap-able executor
 
-    Every class below now just builds its :class:`~repro.core.plan.SolverPlan`
-    in ``__init__`` and delegates ``sample`` to
-    :func:`repro.core.sampler.sample`, so outputs are identical between the
-    two APIs by construction. New code (serving, benchmarks, anything that
-    wants per-step streaming, mid-solve resume, vmap over requests, or shared
-    jit executors) should use plans directly; see ``repro/core/plan.py``.
+    ``make_solver`` survives as a thin alias that warns and returns the
+    :class:`SolverPlan` ``make_plan`` would build (``fused_update=`` is
+    translated to ``fused=`` for old call sites). Plans carry ``.nfe`` but no
+    ``.sample`` method -- pass them to :func:`repro.core.sampler.sample`.
 
 Migration map (old -> new):
 
@@ -26,178 +27,30 @@ Migration map (old -> new):
     IPNDMSolver(sde, ts, order)        -> plan_ipndm(sde, ts, order)
     PNDMSolver(sde, ts)                -> plan_pndm(sde, ts)
     make_solver(name, sde, ts).sample  -> sample(make_plan(name, sde, ts), ...)
-
-The solver family itself is unchanged (paper Secs. 3-4, App. H.2): tAB/rhoAB-
-DEIS (r=0 == deterministic DDIM, Prop. 2), rhoRK-DEIS (heun == EDM/Karras,
-midpoint ~ DPM-Solver2), Euler, Euler-Maruyama on the lambda-SDE, stochastic
-DDIM(eta) (Prop. 4), iPNDM and PNDM.
+    AdaptiveRK23 (analysis tool)       -> unchanged, repro.core.adaptive
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Callable, Optional
+import warnings
 
-import jax
-import numpy as np
-
-from . import plan as P
-from . import sampler as S
-from .plan import _TABLEAUS  # re-export: likelihood.py builds RK grids from it
-from .sde import SDE, VPSDE
-
-Array = jax.Array
-EpsFn = Callable[[Array, Array], Array]
+from .plan import SolverPlan, make_plan
+from .sde import SDE
 
 
-def _f64(x):
-    return np.asarray(x, dtype=np.float64)
+def make_solver(name: str, sde: SDE, ts, **kw) -> SolverPlan:
+    """Deprecated alias for :func:`repro.core.plan.make_plan`.
 
-
-@dataclasses.dataclass
-class SolverBase:
-    """Deprecated shim base: holds a SolverPlan and delegates sampling."""
-
-    name: str
-    nfe: int
-    sde: SDE
-    ts: np.ndarray
-
-    plan: Optional[P.SolverPlan] = dataclasses.field(default=None, repr=False)
-
-    def sample(self, eps_fn: EpsFn, x_T: Array, key: Optional[Array] = None) -> Array:
-        if self.plan is None:
-            raise NotImplementedError
-        return S.sample(self.plan, eps_fn, x_T, key)
-
-
-class ABSolver(SolverBase):
-    """Shim for tAB/rhoAB-DEIS (r=0 is DDIM); see :func:`repro.core.plan.plan_ab`."""
-
-    def __init__(self, sde: SDE, ts, order: int = 0, basis: str = "t",
-                 name: str | None = None, naive_ei: bool = False,
-                 fused_update: bool = False):
-        ts = _f64(ts)
-        super().__init__(name or f"{basis}AB{order}", len(ts) - 1, sde, ts,
-                         P.plan_ab(sde, ts, order=order, basis=basis,
-                                   naive_ei=naive_ei, fused=fused_update))
-        self.order = order
-        self.fused_update = fused_update
-
-
-class RKSolver(SolverBase):
-    """Shim for rhoRK-DEIS; see :func:`repro.core.plan.plan_rk`."""
-
-    def __init__(self, sde: SDE, ts, method: str = "heun", name: str | None = None):
-        ts = _f64(ts)
-        plan = P.plan_rk(sde, ts, method=method)
-        super().__init__(name or f"rho_{method}", plan.nfe, sde, ts, plan)
-        self.method = method
-
-
-class DPMSolver2(RKSolver):
-    """Shim for DPM-Solver-2 (Lu et al. 2022) == plan_rk(method="dpm2")."""
-
-    def __init__(self, sde: SDE, ts, name: str = "dpm2"):
-        super().__init__(sde, ts, method="dpm2", name=name)
-
-
-class EulerSolver(SolverBase):
-    """Shim for Euler on the x-space PF-ODE; see :func:`plan_euler`."""
-
-    def __init__(self, sde: SDE, ts, name: str = "euler"):
-        ts = _f64(ts)
-        super().__init__(name, len(ts) - 1, sde, ts, P.plan_euler(sde, ts))
-
-
-class EMSolver(SolverBase):
-    """Shim for Euler-Maruyama on the lambda-SDE; see :func:`plan_em`."""
-
-    def __init__(self, sde: SDE, ts, lam: float = 1.0, name: str | None = None):
-        ts = _f64(ts)
-        super().__init__(name or f"em_lam{lam:g}", len(ts) - 1, sde, ts,
-                         P.plan_em(sde, ts, lam=lam))
-        self.lam = lam
-
-    def sample(self, eps_fn, x_T, key=None):
-        if key is None:
-            raise ValueError("EMSolver requires a PRNG key")
-        return super().sample(eps_fn, x_T, key)
-
-
-class DDIMSolver(SolverBase):
-    """Shim for stochastic DDIM(eta); see :func:`plan_ddim`."""
-
-    def __init__(self, sde: VPSDE, ts, eta: float = 0.0, name: str | None = None):
-        ts = _f64(ts)
-        super().__init__(name or f"ddim_eta{eta:g}", len(ts) - 1, sde, ts,
-                         P.plan_ddim(sde, ts, eta=eta))
-        self.eta = eta
-
-    def sample(self, eps_fn, x_T, key=None):
-        if self.eta > 0 and key is None:
-            raise ValueError("stochastic DDIM requires a PRNG key")
-        return super().sample(eps_fn, x_T, key)
-
-
-class IPNDMSolver(SolverBase):
-    """Shim for improved PNDM; see :func:`plan_ipndm`."""
-
-    def __init__(self, sde: SDE, ts, order: int = 3, name: str | None = None):
-        ts = _f64(ts)
-        super().__init__(name or f"ipndm{order}", len(ts) - 1, sde, ts,
-                         P.plan_ipndm(sde, ts, order=order))
-        self.order = order
-
-
-class PNDMSolver(SolverBase):
-    """Shim for original PNDM (NFE = N + 9); see :func:`plan_pndm`."""
-
-    def __init__(self, sde: SDE, ts, name: str = "pndm"):
-        ts = _f64(ts)
-        plan = P.plan_pndm(sde, ts)
-        super().__init__(name, plan.nfe, sde, ts, plan)
-
-
-def make_solver(name: str, sde: SDE, ts, **kw) -> SolverBase:
-    """Deprecated factory (prefer :func:`repro.core.plan.make_plan`).
-
-    Names: ddim, tab{0..3}, rhoab{0..3}, rho_heun, rho_midpoint, rho_kutta3,
-    rho_rk4, dpm2, euler, naive_ei, em, ddim_eta (requires explicit ``eta=``),
-    ipndm{1..3}, pndm.
+    Returns the ``SolverPlan`` directly (the class shims are gone); sample
+    with ``repro.core.sample(plan, eps_fn, x_T, key)``. The legacy
+    ``fused_update=`` keyword maps to the plan builders' ``fused=``.
     """
-    n = name.lower()
-    if n in ("ddim", "tab0", "rhoab0"):
-        return ABSolver(sde, ts, order=0, basis="t", name=name)
-    if n.startswith("tab"):
-        return ABSolver(sde, ts, order=int(n[3:]), basis="t", name=name,
-                        fused_update=kw.get("fused_update", False))
-    if n.startswith("rhoab"):
-        return ABSolver(sde, ts, order=int(n[5:]), basis="rho", name=name,
-                        fused_update=kw.get("fused_update", False))
-    if n.startswith("rho_"):
-        return RKSolver(sde, ts, method=n[4:], name=name)
-    if n == "dpm2":
-        return DPMSolver2(sde, ts)
-    if n == "euler":
-        return EulerSolver(sde, ts)
-    if n == "naive_ei":
-        return ABSolver(sde, ts, order=0, naive_ei=True, name=name)
-    if n == "em":
-        return EMSolver(sde, ts, lam=kw.get("lam", 1.0))
-    if n == "ddim_eta":
-        if "eta" not in kw:
-            raise TypeError(
-                "make_solver('ddim_eta') requires an explicit eta= "
-                "(eta=0 is deterministic DDIM, eta=1 ancestral sampling); "
-                "the old silent eta=1.0 default conflicted with DDIMSolver's "
-                "eta=0.0 default")
-        return DDIMSolver(sde, ts, eta=kw["eta"])
-    if n.startswith("ipndm"):
-        order = int(n[5:]) if len(n) > 5 else 3
-        return IPNDMSolver(sde, ts, order=order, name=name)
-    if n == "pndm":
-        return PNDMSolver(sde, ts)
-    raise ValueError(f"unknown solver {name!r}")
+    warnings.warn(
+        "make_solver is deprecated: build plans with repro.core.make_plan "
+        "and run them with repro.core.sample/step",
+        DeprecationWarning, stacklevel=2)
+    if "fused_update" in kw:
+        kw["fused"] = kw.pop("fused_update")
+    return make_plan(name, sde, ts, **kw)
 
 
 SOLVER_NAMES = ["ddim", "tab1", "tab2", "tab3", "rhoab1", "rhoab2", "rhoab3",

@@ -18,7 +18,6 @@ from ..configs.base import ModelConfig
 from ..core import sampler as SAMPLER
 from ..core.plan import SolverPlan
 from ..core.sde import SDE
-from ..core.solvers import SolverBase
 from ..models import transformer as T
 
 EMBED_SCALE = 1.0  # embeddings are ~N(0, 0.02^2) at init; rescale to unit-ish
@@ -94,26 +93,21 @@ def decode_tokens(params, cfg: ModelConfig, x0):
     return jnp.argmax(logits, -1)
 
 
-def sample_tokens(params, cfg: ModelConfig, plan: SolverPlan | SolverBase, key,
+def sample_tokens(params, cfg: ModelConfig, plan: SolverPlan, key,
                   *, batch: int, seq_len: int, prior_std: float | None = None,
                   prefix=None, frames=None, use_pallas: bool = False,
                   hooks=None):
     """Generate token sequences with a DEIS ``SolverPlan``. Returns (tokens, x0).
 
-    ``plan`` may also be a legacy solver shim (its plan is used and
-    ``prior_std`` is taken from the shim's SDE). A bare plan carries no SDE,
-    so ``prior_std`` must be passed explicitly (``sde.prior_std()``).
-    Jit-compatible with ``plan`` as a traced pytree argument, so one compiled
-    executor serves every plan with the same signature at fixed
-    (batch, seq_len).
+    A plan carries no SDE, so ``prior_std`` must be passed explicitly
+    (``sde.prior_std()``). Jit-compatible with ``plan`` as a traced pytree
+    argument, so one compiled executor serves every plan with the same
+    signature at fixed (batch, seq_len).
     """
-    if isinstance(plan, SolverBase):
-        prior_std = plan.sde.prior_std()
-        plan = plan.plan
-    elif prior_std is None:
-        raise TypeError("sample_tokens with a bare SolverPlan requires "
-                        "prior_std= (use sde.prior_std(); a plan carries no "
-                        "SDE to recover it from)")
+    if prior_std is None:
+        raise TypeError("sample_tokens requires prior_std= (use "
+                        "sde.prior_std(); a plan carries no SDE to recover "
+                        "it from)")
     eps_fn = make_eps_fn(params, cfg, prefix=prefix, frames=frames,
                          use_pallas=use_pallas)
     k_prior, k_solve = jax.random.split(key)

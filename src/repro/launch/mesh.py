@@ -26,6 +26,31 @@ def make_host_mesh(model: int = 1):
     return jax.make_mesh((n // model, model), ("data", "model"))
 
 
+def make_request_mesh(data: int | None = None):
+    """1-axis ('data',) mesh for request-parallel serving/sampling.
+
+    The serving stack shards stacked solves over the REQUEST axis only (the
+    eps network is replicated), so its mesh needs just a data axis. ``data``
+    defaults to every device this process sees; tests force a multi-device
+    host with ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (set
+    BEFORE importing jax).
+    """
+    n = jax.device_count() if data is None else data
+    return jax.make_mesh((n,), ("data",))
+
+
+def mesh_fingerprint(mesh) -> tuple:
+    """Hashable identity of a mesh for compile-cache keys.
+
+    Two meshes with the same axis names/sizes over the same devices (in the
+    same order) produce identical executables; anything else must not share
+    a cache slot -- in particular, a resharding recompile hides behind a
+    mesh swap, which is exactly what cache keys exist to surface.
+    """
+    return (tuple(mesh.shape.items()),
+            tuple(d.id for d in np.ravel(mesh.devices)))
+
+
 # TPU v5e-ish hardware constants for the roofline model (per chip).
 PEAK_FLOPS_BF16 = 197e12      # FLOP/s
 HBM_BW = 819e9                # bytes/s

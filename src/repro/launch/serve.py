@@ -36,7 +36,7 @@ import numpy as np
 
 from ..configs.base import get_config
 from ..models import transformer as T
-from ..serving.driver import ServeDriver
+from ..serving.driver import QueueFull, ServeDriver
 from ..serving.engine import ARServeEngine, DiffusionServeEngine, Request
 from ..training import checkpoint as CKPT
 
@@ -97,11 +97,23 @@ def make_http_server(driver: ServeDriver, port: int = 0):
             if not body.get("stream"):
                 try:
                     res = handle.result()
+                except QueueFull as e:                 # backpressure shed
+                    return self._json(429, {"error": str(e)})
                 except (ValueError, TypeError) as e:   # request validation
                     return self._json(400, {"error": str(e)})
                 except Exception as e:   # server fault (e.g. failed tick)
                     return self._json(500, {"error": str(e)})
                 return self._json(200, _result_json(res))
+            # backpressure shed resolves the handle synchronously at submit;
+            # catch it BEFORE streaming headers so clients get the documented
+            # 429 instead of a 200 with a generic error event
+            if handle.done():
+                try:
+                    handle.result()
+                except QueueFull as e:
+                    return self._json(429, {"error": str(e)})
+                except Exception:
+                    pass        # other early failures stream as error events
             # NDJSON streaming: headers first, then a line per step event
             self.send_response(200)
             self.send_header("Content-Type", "application/x-ndjson")
@@ -169,6 +181,14 @@ def main():
     ap.add_argument("--steps-per-tick", type=int, default=None,
                     help="throttle: groups stepped per tick (enables EDF)")
     ap.add_argument("--no-compaction", action="store_true")
+    ap.add_argument("--max-pending", type=int, default=None,
+                    help="driver backpressure: bound on in-flight requests; "
+                         "over it, submits are shed with QueueFull (HTTP 429)")
+    ap.add_argument("--data-parallel", action="store_true",
+                    help="shard stacked solves over the request axis on a "
+                         "('data',) mesh spanning every visible device "
+                         "(force N host devices with "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count=N)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -181,11 +201,18 @@ def main():
         print(f"restored params from {args.ckpt_dir}")
 
     if args.mode == "diffusion":
+        mesh = None
+        if args.data_parallel:
+            from .mesh import make_request_mesh
+            mesh = make_request_mesh()
+            print(f"request-parallel mesh: {jax.device_count()} devices on "
+                  "axis 'data' (group sizes round up to multiples)")
         eng = DiffusionServeEngine(params, cfg,
                                    steps_per_tick=args.steps_per_tick,
-                                   compaction=not args.no_compaction)
+                                   compaction=not args.no_compaction,
+                                   mesh=mesh)
         if args.transport == "http":
-            with ServeDriver(eng) as driver:
+            with ServeDriver(eng, max_pending=args.max_pending) as driver:
                 server = make_http_server(driver, args.port)
                 host, port = server.server_address
                 print(f"serving DEIS on http://{host}:{port}/v1/generate "
@@ -198,7 +225,7 @@ def main():
                     server.shutdown()
             return
         if args.transport == "driver":
-            with ServeDriver(eng) as driver:
+            with ServeDriver(eng, max_pending=args.max_pending) as driver:
                 results = asyncio.run(
                     _driver_demo(driver, args.requests, args.seq_len))
                 print(f"served {len(results)} requests; "

@@ -34,6 +34,13 @@ without eta) are caught on the scheduler thread and delivered to the ONE
 offending request's future as the original exception; other in-flight
 requests are unaffected (contrast with the synchronous ``serve()``'s
 all-or-nothing batch validation).
+
+Backpressure contract: with ``max_pending=n`` the driver bounds its
+in-flight set (submitted but unfinished requests). The (n+1)-th concurrent
+submission is shed in O(1) at submit time: its handle's future fails with
+:class:`QueueFull` and its event stream closes empty; nothing is enqueued,
+the scheduler never sees it, and every admitted request proceeds untouched.
+Both ``submit`` and ``submit_async`` shed identically.
 """
 from __future__ import annotations
 
@@ -47,6 +54,16 @@ from typing import Iterator, Optional
 from .engine import DiffusionServeEngine, Request, Result, StepEvent
 
 _CLOSE = object()   # stream sentinel: no more events
+
+
+class QueueFull(RuntimeError):
+    """Raised on a request's handle when the driver sheds it for backpressure.
+
+    Delivered through the rejected request's own :class:`ServeStream` future
+    (``handle.result()`` re-raises it; the event stream closes empty) -- the
+    driver itself never crashes and every other in-flight request is
+    unaffected. Clients treat it like HTTP 429: back off and resubmit.
+    """
 
 
 class ServeStream:
@@ -167,10 +184,18 @@ class ServeDriver:
     """
 
     def __init__(self, engine: DiffusionServeEngine, *,
-                 stream_decode: bool = False, idle_wait_s: float = 0.005):
+                 stream_decode: bool = False, idle_wait_s: float = 0.005,
+                 max_pending: int | None = None):
+        """``max_pending``: bound on in-flight requests (submitted, not yet
+        finished). ``None`` = unbounded (the pre-backpressure behavior).
+        Submissions over the bound are shed instantly: the returned handle's
+        future fails with :class:`QueueFull` and nothing reaches the
+        scheduler thread, so an ingest burst can neither grow the inbox
+        without limit nor crash the driver."""
         self.engine = engine
         self.stream_decode = stream_decode
         self.idle_wait_s = idle_wait_s
+        self.max_pending = max_pending
         self._inbox: queue.Queue = queue.Queue()
         self._streams: dict[int, ServeStream] = {}
         self._lock = threading.Lock()
@@ -212,13 +237,22 @@ class ServeDriver:
 
         ``request.uid`` must be unique among in-flight requests (it keys the
         event fan-out). Validation happens on the scheduler thread; errors
-        surface on the returned handle, not here.
-        """
+        surface on the returned handle, not here. Backpressure also surfaces
+        on the handle: over ``max_pending`` in-flight requests, the handle
+        comes back already failed with :class:`QueueFull` (fast shed -- the
+        request never touches the scheduler)."""
         stream = ServeStream(request.uid)
         with self._lock:
             if request.uid in self._streams:
                 raise ValueError(f"request uid {request.uid} is already "
                                  "in flight")
+            if self.max_pending is not None and \
+                    len(self._streams) >= self.max_pending:
+                stream._fail(QueueFull(
+                    f"driver at max_pending={self.max_pending} in-flight "
+                    f"requests; request uid {request.uid} shed -- back off "
+                    "and resubmit"))
+                return stream
             self._streams[request.uid] = stream
         self._inbox.put((request, stream))
         # start AFTER the put: if a concurrent stop() let the scheduler
@@ -238,7 +272,8 @@ class ServeDriver:
         eng = self.engine
         return {"ticks": eng.ticks, "executors": eng.num_executors,
                 "wasted_row_steps": eng.wasted_row_steps,
-                "in_flight": len(self._streams)}
+                "in_flight": len(self._streams),
+                "max_pending": self.max_pending}
 
     # ------------------------------------------------------------ scheduler
     def _drain_inbox(self, block: bool) -> None:

@@ -81,7 +81,8 @@ import numpy as np
 from ..configs.base import ModelConfig
 from ..core import get_timesteps, make_plan
 from ..core import sampler as SAMPLER
-from ..core.plan import SolverPlan, pad_plan, solver_stages, stack_plans, take_rows
+from ..core.plan import (SolverPlan, inert_row, pad_plan, solver_stages,
+                         stack_plans, take_rows)
 from ..core.sde import SDE, VPSDE
 from ..diffusion import lm as DLM
 from ..models import transformer as T
@@ -162,7 +163,10 @@ class ARServeEngine:
         # deliberately simple, correct reference loop (throughput benchmarks
         # jit the batched decode path directly).
         for req in queue:
-            t0 = time.time()
+            # perf_counter, NOT time.time(): the diffusion engine times with
+            # the monotonic perf_counter, and mixing clock domains lets a
+            # wall-clock step (NTP, suspend) yield negative/garbage latency.
+            t0 = time.perf_counter()
             extras = extras_fn(req) if extras_fn else {}
             prompt = jnp.asarray(req.prompt)[None]
             batch = {"tokens": prompt, **extras}
@@ -187,7 +191,7 @@ class ARServeEngine:
                 out_tokens.append(int(tok[0, 0]))
                 pos += 1
             results.append(Result(req.uid, np.asarray(out_tokens),
-                                  time.time() - t0))
+                                  time.perf_counter() - t0))
         return results
 
 
@@ -201,12 +205,21 @@ _PNDM_WARMUP_EXTRA = 9
 
 @dataclasses.dataclass
 class _Row:
-    """Per-request bookkeeping inside a (possibly ragged) group."""
-    req: Request
+    """Per-request bookkeeping inside a (possibly ragged) group.
+
+    ``pad`` rows are structural filler, not requests: sharded admission
+    rounds group sizes up to a multiple of the mesh's data-axis size with
+    inert rows (``req is None``), and sharded compaction may retain a
+    retired request's row as filler (``req`` kept, ``pad`` flipped). Pad
+    rows never emit Results, never appear in StepEvents, and never count as
+    wasted steps -- they exist so the stacked axis always places evenly.
+    """
+    req: Request | None
     n_steps: int                # TRUE solver steps of this request's own plan
     nfe: int                    # TRUE network evals (plan.nfe, pre-padding)
     deadline: float             # absolute deadline (inf when best-effort)
     done: bool = False          # Result already emitted
+    pad: bool = False           # structural filler row (see class docstring)
 
 
 @dataclasses.dataclass
@@ -231,8 +244,13 @@ class _Group:
     skipped: int = 0            # consecutive ticks not selected (aging)
 
     @property
+    def real_idx(self) -> list:
+        """Stacked-axis indices of real (non-filler) rows."""
+        return [i for i, r in enumerate(self.rows) if not r.pad]
+
+    @property
     def uids(self) -> tuple:
-        return tuple(r.req.uid for r in self.rows)
+        return tuple(self.rows[i].req.uid for i in self.real_idx)
 
 
 class DiffusionServeEngine:
@@ -247,12 +265,21 @@ class DiffusionServeEngine:
     def __init__(self, params, cfg: ModelConfig, sde: Optional[SDE] = None,
                  schedule: str = "quadratic", max_group: int = 8,
                  steps_per_tick: int | None = None, aging_ticks: int = 8,
-                 compaction: bool = True):
+                 compaction: bool = True, mesh=None):
         """``steps_per_tick``: groups advanced per tick (None = all active,
         the PR-2 behavior; an int enables true EDF selection).
         ``aging_ticks``: skipped ticks per +1 effective-priority boost
         (starvation aging). ``compaction``: retire finished rows mid-flight
-        and re-pack survivors into a smaller cached batch bucket."""
+        and re-pack survivors into a smaller cached batch bucket.
+
+        ``mesh``: a ``jax.sharding.Mesh`` with a data-like axis (e.g.
+        :func:`repro.launch.mesh.make_request_mesh`) shards every stacked
+        solve over the REQUEST axis: params replicate, state/plan request
+        leaves get ``NamedSharding`` placements, executors jit with explicit
+        in/out shardings, and admission rounds group sizes up to a multiple
+        of the data-axis size with inert filler rows so groups always place
+        evenly. Sharding changes WHERE rows compute, never what: samples
+        stay bitwise identical to the single-device path."""
         assert cfg.objective == "diffusion"
         self.params, self.cfg = params, cfg
         self.sde = sde or VPSDE()
@@ -263,8 +290,42 @@ class DiffusionServeEngine:
             else max(1, steps_per_tick)
         self.aging_ticks = max(1, aging_ticks)
         self.compaction = compaction
+        self.mesh = mesh
+        if mesh is not None:
+            from ..launch.mesh import mesh_fingerprint
+            from ..sharding.rules import batch_axes
+            self._mesh_key = mesh_fingerprint(mesh)
+            self._data_size = int(np.prod(
+                [mesh.shape[a] for a in batch_axes(mesh)])) or 1
+            if self._data_size > self.max_group:
+                raise ValueError(
+                    f"mesh data-axis size {self._data_size} exceeds "
+                    f"max_group={self.max_group}: every group must round up "
+                    "to a multiple of the axis, so the smallest placeable "
+                    "group would already break the max_group bound. Raise "
+                    "max_group or shrink the mesh.")
+            # quantize the chunk size so rounded-up groups NEVER exceed the
+            # operator's max_group bound (e.g. max_group=10 on an 8-way axis
+            # admits 8-request chunks, not 10 -> 16)
+            self._chunk_cap = (self.max_group // self._data_size) \
+                * self._data_size
+            # replicate params over the mesh ONCE; executors AND decode take
+            # them as-placed so no per-call transfer happens, and the
+            # engine's own reference is the replicated copy (keeping the
+            # caller's single-device original alive too would double param
+            # memory on device 0)
+            self._params_exec = jax.device_put(
+                params, jax.sharding.NamedSharding(
+                    mesh, jax.sharding.PartitionSpec()))
+            self.params = self._params_exec
+        else:
+            self._mesh_key = None
+            self._data_size = 1
+            self._chunk_cap = self.max_group
+            self._params_exec = params
         self._plans: dict = {}      # (solver, nfe, eta) -> SolverPlan
-        self._compiled: dict = {}   # (plan.signature, batch, seq_len) -> AOT step
+        self._compiled: dict = {}   # (signature, batch, seq_len, mesh_key)
+                                    #   -> AOT step
         self._pending: deque = deque()   # (Request, SolverPlan, t_submit)
         self._active: list[_Group] = []
         self._arrivals = 0          # admission sequence counter
@@ -288,14 +349,27 @@ class DiffusionServeEngine:
         return self._plans[key_]
 
     # --------------------------------------------------------- executors
+    def _shardings(self, plan: SolverPlan, state):
+        """(plan, state) NamedSharding trees for this engine's mesh (or
+        (None, None) unsharded). NamedShardings are shape-agnostic, so the
+        same trees place any batch size whose request axis divides the data
+        axes -- which admission's group-size rounding guarantees."""
+        if self.mesh is None:
+            return None, None
+        return SAMPLER._request_shardings(plan, state, self.mesh)
+
     def _executor(self, sig, plan: SolverPlan, state) -> tuple[Callable, float]:
-        """AOT-compiled single step for this (signature, batch, seq_len).
+        """AOT-compiled single step for this (signature, batch, seq_len,
+        mesh).
 
         ``k`` is a traced argument, so ONE trace serves every step index of
         every group with this cache key; compiling ahead of time (instead of
         on first call) is what lets compile cost be measured apart from
-        solve time."""
-        key_ = (sig, state.x.shape[0], state.x.shape[1])
+        solve time. Under a mesh the executor is jitted with explicit
+        in/out shardings (params replicated, request-axis leaves over the
+        data axes), and the mesh fingerprint keys the cache so a mesh swap
+        can never silently reuse a stale placement."""
+        key_ = (sig, state.x.shape[0], state.x.shape[1], self._mesh_key)
         if key_ in self._compiled:
             return self._compiled[key_], 0.0
         cfg = self.cfg
@@ -304,8 +378,17 @@ class DiffusionServeEngine:
             return SAMPLER.step(plan_arg, k, st, DLM.make_eps_fn(params, cfg))
 
         t0 = time.perf_counter()
-        compiled = jax.jit(run).lower(self.params, plan, jnp.int32(0),
-                                      state).compile()
+        if self.mesh is None:
+            jitted = jax.jit(run)
+        else:
+            plan_sh, state_sh = self._shardings(plan, state)
+            param_sh = jax.sharding.NamedSharding(
+                self.mesh, jax.sharding.PartitionSpec())
+            jitted = jax.jit(run, in_shardings=(param_sh, plan_sh, None,
+                                                state_sh),
+                             out_shardings=state_sh)
+        compiled = jitted.lower(self._params_exec, plan, jnp.int32(0),
+                                state).compile()
         compile_s = time.perf_counter() - t0
         self._compiled[key_] = compiled
         return compiled, compile_s
@@ -325,7 +408,10 @@ class DiffusionServeEngine:
             raise ValueError(f"Request.nfe must be >= 1, got {request.nfe}")
         plan = self._plan(request.solver, request.nfe,
                           request.eta if request.solver == "ddim_eta" else None)
-        self._pending.append((request, plan, time.monotonic()))
+        # perf_counter everywhere: one monotonic clock domain for deadlines,
+        # solve timing and compile timing (mixing in wall-clock time.time()
+        # was the old LM-loop bug -- negative latencies across a clock step).
+        self._pending.append((request, plan, time.perf_counter()))
 
     @staticmethod
     def _abs_deadline(req: Request, t_submit: float) -> float:
@@ -338,7 +424,17 @@ class DiffusionServeEngine:
         NFE budgets whose plans pad+stack is one solve (ragged groups).
         Within a bucket the most urgent requests (priority desc, deadline
         asc) are chunked first; buckets larger than ``max_group`` split into
-        multiple groups."""
+        multiple groups.
+
+        Under a mesh, each chunk is rounded UP to a multiple of the data-axis
+        size with inert filler rows (:func:`repro.core.plan.inert_row`): the
+        stacked axis then always divides the mesh's data axes, so every group
+        places evenly and the executor cache sees only multiple-of-axis batch
+        sizes. Chunking itself is quantized to ``(max_group // axis) * axis``
+        so rounding can never exceed the operator's ``max_group`` bound.
+        Filler rows are born ``done`` -- they emit nothing, cost no extra
+        wall-clock in a data-parallel step, and retire for free with the
+        group."""
         if not self._pending:
             return
         buckets: dict = {}
@@ -349,21 +445,34 @@ class DiffusionServeEngine:
         for (_fam, seq_len), items in buckets.items():
             items.sort(key=lambda it: (-it[0].priority,
                                        self._abs_deadline(it[0], it[2])))
-            for i in range(0, len(items), self.max_group):
-                chunk = items[i:i + self.max_group]
+            for i in range(0, len(items), self._chunk_cap):
+                chunk = items[i:i + self._chunk_cap]
                 n_max = max(p.n_steps for _, p, _ in chunk)
                 padded = [pad_plan(p, n_max) for _, p, _ in chunk]
-                sig = padded[0].signature
-                plan = stack_plans(padded)
-                reqs = [r for r, _, _ in chunk]
                 rows = [_Row(req=r, n_steps=p.n_steps, nfe=p.nfe,
                              deadline=self._abs_deadline(r, t))
                         for (r, p, t) in chunk]
-                keys = DLM.request_keys([r.seed for r in reqs])
+                seeds = [r.seed for r, _, _ in chunk]
+                n_fill = (-len(chunk)) % self._data_size
+                if n_fill:
+                    filler = inert_row(padded[0])
+                    padded += [filler] * n_fill
+                    rows += [_Row(req=None, n_steps=n_max, nfe=0,
+                                  deadline=math.inf, done=True, pad=True)
+                             for _ in range(n_fill)]
+                    seeds += [0] * n_fill
+                sig = padded[0].signature
+                plan = stack_plans(padded)
+                keys = DLM.request_keys(seeds)
                 state = DLM.init_sample_state(
                     self.cfg, plan, keys, seq_len=seq_len,
                     prior_std=self.sde.prior_std())
                 fn, compile_s = self._executor(sig, plan, state)
+                plan_sh, state_sh = self._shardings(plan, state)
+                if plan_sh is not None:
+                    plan = jax.device_put(plan, plan_sh)
+                    state = jax.device_put(state, state_sh)
+                reqs = [r for r, _, _ in chunk]
                 self._arrivals += 1
                 self._active.append(_Group(
                     rows=rows, sig=sig, plan=plan, state=state, fn=fn,
@@ -388,22 +497,52 @@ class DiffusionServeEngine:
             return order, []
         return order[:self.steps_per_tick], order[self.steps_per_tick:]
 
-    def _compact(self, g: _Group, live: list[int]) -> None:
-        """Re-pack surviving rows into a smaller (sig, batch, seq_len) bucket.
+    def _compact_target(self, g: _Group, live: list[int]) -> list[int] | None:
+        """Row indices to KEEP when compacting ``g``, or None to skip.
+
+        Unsharded: keep exactly the live rows (compact whenever any row
+        retired). Under a mesh the kept count must stay a multiple of the
+        data-axis size, so the target rounds up and the gap is filled with
+        already-retired rows (original filler first, then retired requests,
+        lowest index first) which are kept as structural padding; when the
+        rounded target equals the current batch there is nothing to shrink
+        and compaction is skipped (no resharding, no recompile, no churn).
+        """
+        target = len(live) + ((-len(live)) % self._data_size)
+        if target >= len(g.rows):
+            return None
+        # done rows ARE the non-live rows (live = every not-done index)
+        fillers = [i for i, r in enumerate(g.rows) if r.done]
+        fillers.sort(key=lambda i: (not g.rows[i].pad, i))
+        keep = sorted(live + fillers[:target - len(live)])
+        return keep
+
+    def _compact(self, g: _Group, keep: list[int]) -> None:
+        """Re-pack kept rows into a smaller (sig, batch, seq_len) bucket.
 
         Gathers plan rows and state rows whole (coefficients, iterate, eps
         history, per-request key chains), so the surviving requests' samples
         are bit-identical to an uncompacted solve; only the executor changes,
         to the cached one for the smaller batch (compiled on first need,
-        charged to this group's ``compile_s``). Group urgency is recomputed
-        from the SURVIVORS so a retired urgent row's priority/deadline does
-        not keep preempting other groups on behalf of best-effort leftovers."""
-        g.plan = take_rows(g.plan, live)
-        g.state = SAMPLER.take_state_rows(g.state, live)
-        g.rows = [g.rows[i] for i in live]
-        g.n_steps = max(r.n_steps for r in g.rows)
-        g.priority = max(r.req.priority for r in g.rows)
-        g.deadline = min(r.deadline for r in g.rows)
+        charged to this group's ``compile_s``). Under a mesh the gathers are
+        sharding-preserving (committed straight back to the request-axis
+        ``NamedSharding``), so mid-flight shrink never reshards or
+        recompiles. Group urgency is recomputed from the LIVE survivors so a
+        retired urgent row's priority/deadline does not keep preempting
+        other groups on behalf of best-effort leftovers."""
+        plan_sh, state_sh = self._shardings(g.plan, g.state)
+        g.plan = take_rows(g.plan, keep, shardings=plan_sh)
+        g.state = SAMPLER.take_state_rows(g.state, keep, shardings=state_sh)
+        g.rows = [g.rows[i] for i in keep]
+        live = []
+        for r in g.rows:
+            if r.done:
+                r.pad = True        # retained retired row: structural filler
+            else:
+                live.append(r)
+        g.n_steps = max(r.n_steps for r in live)
+        g.priority = max(r.req.priority for r in live)
+        g.deadline = min(r.deadline for r in live)
         g.fn, compile_s = self._executor(g.sig, g.plan, g.state)
         g.compile_s += compile_s
 
@@ -423,7 +562,8 @@ class DiffusionServeEngine:
     @property
     def num_executors(self) -> int:
         """Compiled executors alive -- one per (plan.signature, batch,
-        seq_len); growth during steady-state traffic means recompilation."""
+        seq_len, mesh fingerprint); growth during steady-state traffic means
+        recompilation."""
         return len(self._compiled)
 
     def tick(self, *, on_step=None, stream_decode: bool = False) -> list[Result]:
@@ -448,9 +588,13 @@ class DiffusionServeEngine:
         dispatched = []
         for g in stepped:
             g.skipped = 0
-            self.wasted_row_steps += sum(r.done for r in g.rows)
+            # structural filler rows (pad) are free capacity in a
+            # data-parallel step, not waste; only retired REQUEST rows that
+            # keep stepping count
+            self.wasted_row_steps += sum(
+                r.done and not r.pad for r in g.rows)
             t0 = time.perf_counter()
-            g.state = g.fn(self.params, g.plan, jnp.int32(g.k), g.state)
+            g.state = g.fn(self._params_exec, g.plan, jnp.int32(g.k), g.state)
             dispatched.append((g, t0))
         for g, t0 in dispatched:
             jax.block_until_ready(g.state.x)
@@ -458,21 +602,27 @@ class DiffusionServeEngine:
             g.k += 1
             newly = [i for i, r in enumerate(g.rows)
                      if not r.done and r.n_steps == g.k]
+            # decode against the as-placed params (replicated under a mesh):
+            # a data-sharded iterate composes with them eagerly, so the
+            # sharded and unsharded paths share one decode expression
             stream_toks = None
             if on_step is not None and stream_decode:
                 stream_toks = np.asarray(DLM.decode_tokens(
-                    self.params, self.cfg, g.state.x))
+                    self._params_exec, self.cfg, g.state.x))
             if on_step is not None:
-                on_step(StepEvent(uids=g.uids, k=g.k, n_steps=g.n_steps,
-                                  tokens=stream_toks,
-                                  row_steps=tuple(r.n_steps for r in g.rows)))
+                real = g.real_idx
+                on_step(StepEvent(
+                    uids=g.uids, k=g.k, n_steps=g.n_steps,
+                    tokens=stream_toks[real] if stream_toks is not None
+                    else None,
+                    row_steps=tuple(g.rows[i].n_steps for i in real)))
             if newly:
                 # decode ONLY the finished rows unless a full partial decode
                 # already exists (ragged groups would otherwise pay one
                 # full-batch decode per distinct member NFE)
                 new_toks = stream_toks[newly] if stream_toks is not None \
                     else np.asarray(DLM.decode_tokens(
-                        self.params, self.cfg,
+                        self._params_exec, self.cfg,
                         g.state.x[jnp.asarray(newly)]))
                 for j, i in enumerate(newly):
                     g.rows[i].done = True
@@ -483,7 +633,18 @@ class DiffusionServeEngine:
             if not live:
                 self._active.remove(g)
             elif self.compaction and len(live) < len(g.rows):
-                self._compact(g, live)
+                keep = self._compact_target(g, live)
+                if keep is not None:
+                    self._compact(g, keep)
+                else:
+                    # the group already sits at the smallest placeable
+                    # multiple of the data axis (mesh only: unsharded groups
+                    # always shrink): its retired rows are structurally
+                    # required filler -- same status as rows retained by a
+                    # compaction -- not waste
+                    for r in g.rows:
+                        if r.done:
+                            r.pad = True
         return finished
 
     def serve(self, requests: list[Request], *, on_step=None,

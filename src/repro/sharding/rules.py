@@ -182,3 +182,47 @@ def cache_specs(cache_shape, mesh: Mesh, seq_shard: bool = True):
 def to_shardings(spec_tree, mesh: Mesh):
     return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
                         is_leaf=lambda x: isinstance(x, P))
+
+
+# -------------------------------------------- request-axis (serving) sharding
+def _leading_axis_spec(leaf, mesh: Mesh, dim: int) -> P:
+    """P with the data axes on ``dim`` when divisible, else replicated."""
+    ba = batch_axes(mesh)
+    parts: list = [None] * leaf.ndim
+    if ba and dim < leaf.ndim and _div(leaf.shape[dim], mesh, ba):
+        parts[dim] = ba[0] if len(ba) == 1 else ba
+    return P(*parts)
+
+
+def plan_specs(plan, mesh: Mesh):
+    """PartitionSpec tree for a *stacked* :class:`~repro.core.plan.SolverPlan`.
+
+    Every dynamic leaf of a stacked plan (coefficient arrays and ``ts``)
+    carries the request axis leading, so each is sharded over the data-like
+    mesh axes when the batch divides evenly and replicated otherwise.
+    Unstacked plans (no request axis) replicate entirely. The result has the
+    plan's own tree structure, so it can be passed directly as a jit
+    ``in_shardings`` entry (static metadata rides in the treedef).
+    """
+    stacked = getattr(plan, "stacked", False)
+    return jax.tree.map(
+        lambda leaf: _leading_axis_spec(leaf, mesh, 0) if stacked else P(),
+        plan)
+
+
+def state_specs(state, mesh: Mesh):
+    """PartitionSpec tree for a stacked :class:`SamplerState`.
+
+    The request axis is sharded over the data-like mesh axes: ``x`` is
+    ``(R, *inner)`` (axis 0), ``hist`` is ``(history_len, R, *inner)``
+    (axis 1), the per-request key stack is ``(R, 2)`` (axis 0), and the step
+    counter ``k`` is replicated. Non-divisible (or unstacked, ``key.ndim !=
+    2``) states fall back to replication leaf-wise.
+    """
+    from ..core.sampler import SamplerState  # local: avoid core<->sharding cycle
+    stacked = state.key.ndim == 2
+    return SamplerState(
+        x=_leading_axis_spec(state.x, mesh, 0) if stacked else P(),
+        hist=_leading_axis_spec(state.hist, mesh, 1) if stacked else P(),
+        key=_leading_axis_spec(state.key, mesh, 0) if stacked else P(),
+        k=P())

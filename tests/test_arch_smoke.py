@@ -139,15 +139,16 @@ def test_moe_capacity_drops_are_bounded():
 def test_diffusion_lm_sampling_roundtrip():
     """Train-free check: DEIS sampling through a random reduced backbone
     produces tokens of the right shape with finite embeddings."""
-    from repro.core import VPSDE, get_timesteps, make_solver
+    from repro.core import VPSDE, get_timesteps, make_plan
     from repro.diffusion import lm as DLM
     cfg = get_config("gemma_2b").reduced()  # diffusion objective default off;
     cfg = cfg.with_(objective="diffusion")
     params = T.init_params(cfg, jax.random.PRNGKey(0))
     sde = VPSDE()
-    sol = make_solver("tab2", sde, get_timesteps(sde, 6, "quadratic"))
-    toks, x0 = DLM.sample_tokens(params, cfg, sol, jax.random.PRNGKey(1),
-                                 batch=2, seq_len=16)
+    plan = make_plan("tab2", sde, get_timesteps(sde, 6, "quadratic"))
+    toks, x0 = DLM.sample_tokens(params, cfg, plan, jax.random.PRNGKey(1),
+                                 batch=2, seq_len=16,
+                                 prior_std=sde.prior_std())
     assert toks.shape == (2, 16)
     assert np.isfinite(np.asarray(x0)).all()
 

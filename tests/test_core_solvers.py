@@ -10,7 +10,7 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (VPSDE, VESDE, get_timesteps, ab_coefficients,
-                        ddim_coefficients_vp, make_solver)
+                        ddim_coefficients_vp, make_plan, sample)
 from repro.core.coeffs import AB_WEIGHTS
 from repro.diffusion.analytic import GaussianData, default_gmm
 
@@ -25,8 +25,8 @@ def _gaussian_problem(d=4, batch=64):
 
 
 def _err(solver_name, eps, xT, exact, n, schedule="uniform"):
-    s = make_solver(solver_name, SDE, get_timesteps(SDE, n, schedule))
-    return float(jnp.sqrt(jnp.mean((s.sample(eps, xT) - exact) ** 2)))
+    plan = make_plan(solver_name, SDE, get_timesteps(SDE, n, schedule))
+    return float(jnp.sqrt(jnp.mean((sample(plan, eps, xT) - exact) ** 2)))
 
 
 # ---------------------------------------------------------------- Prop. 2
@@ -51,8 +51,9 @@ def test_tab0_equals_rhoab0():
 def test_ddim_eta0_equals_tab0_samples():
     eps, xT, _ = _gaussian_problem()
     ts = get_timesteps(SDE, 10, "quadratic")
-    a = make_solver("ddim", SDE, ts).sample(eps, xT)
-    b = make_solver("ddim_eta", SDE, ts, eta=0.0).sample(eps, xT, jax.random.PRNGKey(1))
+    a = sample(make_plan("ddim", SDE, ts), eps, xT)
+    b = sample(make_plan("ddim_eta", SDE, ts, eta=0.0), eps, xT,
+               jax.random.PRNGKey(1))
     np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-9, atol=1e-9)
 
 
@@ -116,9 +117,10 @@ def test_quadratic_schedule_beats_uniform_at_low_nfe():
     gmm = default_gmm(SDE, d=2)
     eps = gmm.eps_fn()
     xT = jax.random.normal(jax.random.PRNGKey(2), (256, 2)) * SDE.prior_std()
-    ref = make_solver("rho_rk4", SDE, get_timesteps(SDE, 400, "log_rho")).sample(eps, xT)
+    ref = sample(make_plan("rho_rk4", SDE, get_timesteps(SDE, 400, "log_rho")),
+                 eps, xT)
     def err(sched):
-        x = make_solver("tab2", SDE, get_timesteps(SDE, 10, sched)).sample(eps, xT)
+        x = sample(make_plan("tab2", SDE, get_timesteps(SDE, 10, sched)), eps, xT)
         return float(jnp.sqrt(jnp.mean((x - ref) ** 2)))
     assert err("quadratic") < err("uniform")
 
@@ -130,8 +132,8 @@ def test_em_sampler_distribution_moments():
     g = GaussianData(SDE, mean=np.full(d, 1.0), var=np.full(d, 0.3))
     eps = g.eps_fn()
     xT = jax.random.normal(jax.random.PRNGKey(3), (4096, d))
-    s = make_solver("em", SDE, get_timesteps(SDE, 200, "uniform"))
-    x0 = s.sample(eps, xT, key=jax.random.PRNGKey(4))
+    plan = make_plan("em", SDE, get_timesteps(SDE, 200, "uniform"))
+    x0 = sample(plan, eps, xT, jax.random.PRNGKey(4))
     assert np.allclose(np.asarray(x0).mean(0), 1.0, atol=0.08)
     assert np.allclose(np.asarray(x0).var(0), 0.3, atol=0.08)
 
@@ -141,8 +143,9 @@ def test_stochastic_ddim_moments():
     g = GaussianData(SDE, mean=np.full(d, -0.5), var=np.full(d, 0.5))
     eps = g.eps_fn()
     xT = jax.random.normal(jax.random.PRNGKey(5), (4096, d))
-    s = make_solver("ddim_eta", SDE, get_timesteps(SDE, 100, "quadratic"), eta=1.0)
-    x0 = s.sample(eps, xT, key=jax.random.PRNGKey(6))
+    plan = make_plan("ddim_eta", SDE, get_timesteps(SDE, 100, "quadratic"),
+                     eta=1.0)
+    x0 = sample(plan, eps, xT, jax.random.PRNGKey(6))
     assert np.allclose(np.asarray(x0).mean(0), -0.5, atol=0.08)
     assert np.allclose(np.asarray(x0).var(0), 0.5, atol=0.1)
 
@@ -160,10 +163,10 @@ def test_ipndm_beats_ddim():
 
 def test_pndm_nfe_accounting():
     ts = get_timesteps(SDE, 20, "uniform")
-    assert make_solver("pndm", SDE, ts).nfe == 20 + 9
-    assert make_solver("ipndm3", SDE, ts).nfe == 20
-    assert make_solver("rho_heun", SDE, ts).nfe == 40
-    assert make_solver("rho_rk4", SDE, ts).nfe == 80
+    assert make_plan("pndm", SDE, ts).nfe == 20 + 9
+    assert make_plan("ipndm3", SDE, ts).nfe == 20
+    assert make_plan("rho_heun", SDE, ts).nfe == 40
+    assert make_plan("rho_rk4", SDE, ts).nfe == 80
 
 
 # --------------------------------------------------------------- property
@@ -204,10 +207,10 @@ def test_sampling_is_linear_in_state_for_linear_eps(seed):
     superposition x(a+b) - x(0) == (x(a)-x(0)) + (x(b)-x(0))."""
     eps, _, _ = _gaussian_problem()
     ts = get_timesteps(SDE, 8, "quadratic")
-    s = make_solver("tab2", SDE, ts)
+    plan = make_plan("tab2", SDE, ts)
     key = jax.random.PRNGKey(seed)
     a, b = jax.random.normal(key, (2, 1, 4))
-    f = lambda z: s.sample(eps, z)
+    f = lambda z: sample(plan, eps, z)
     zero = f(jnp.zeros((1, 4)))
     lhs = f(a + b) - zero
     rhs = (f(a) - zero) + (f(b) - zero)

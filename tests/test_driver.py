@@ -14,7 +14,7 @@ import pytest
 from repro.configs.base import get_config
 from repro.launch.serve import make_http_server
 from repro.models import transformer as T
-from repro.serving.driver import ServeDriver
+from repro.serving.driver import QueueFull, ServeDriver
 from repro.serving.engine import DiffusionServeEngine, Request
 
 
@@ -119,6 +119,58 @@ def test_driver_rejects_duplicate_inflight_uid(diff_setup):
         # uid is reusable once the request completed
         drv.submit(Request(uid=5, seq_len=8, nfe=3, solver="ddim",
                            seed=1)).result()
+
+
+def test_driver_backpressure_sheds_over_max_pending(diff_setup):
+    """With max_pending=n the (n+1)-th concurrent submit is shed instantly:
+    its OWN handle fails with QueueFull (empty event stream, no driver
+    crash), every admitted request completes untouched, and capacity freed
+    by completions is reusable."""
+    params, cfg = diff_setup
+    eng = DiffusionServeEngine(params, cfg)
+    with ServeDriver(eng, max_pending=2) as drv:
+        h1 = drv.submit(Request(uid=0, seq_len=8, nfe=3, solver="ddim", seed=1))
+        h2 = drv.submit(Request(uid=1, seq_len=8, nfe=3, solver="ddim", seed=2))
+        shed = drv.submit(Request(uid=2, seq_len=8, nfe=3, solver="ddim",
+                                  seed=3))
+        assert shed.done()                       # rejected at submit, O(1)
+        with pytest.raises(QueueFull, match="max_pending"):
+            shed.result(timeout=1)
+        assert list(shed.events()) == []         # stream closed, empty
+        r1, r2 = h1.result(), h2.result()        # admitted work unaffected
+        assert r1.tokens.shape == (8,) and r2.tokens.shape == (8,)
+        # completions free capacity; the same uid may come back
+        again = drv.submit(Request(uid=2, seq_len=8, nfe=3, solver="ddim",
+                                   seed=3))
+        assert again.result(timeout=120).tokens.shape == (8,)
+        # the shed request's sample is what a non-shed run produces
+        sync = DiffusionServeEngine(params, cfg)
+        want = sync.serve([Request(uid=2, seq_len=8, nfe=3, solver="ddim",
+                                   seed=3)])[0]
+        np.testing.assert_array_equal(again.result().tokens, want.tokens)
+
+
+def test_driver_backpressure_async_path(diff_setup):
+    """submit_async sheds identically: the async handle's result() raises
+    QueueFull and its async iterator is empty."""
+    params, cfg = diff_setup
+    eng = DiffusionServeEngine(params, cfg)
+
+    async def go(drv):
+        h1 = await drv.submit_async(
+            Request(uid=0, seq_len=8, nfe=4, solver="ddim", seed=0))
+        shed = await drv.submit_async(
+            Request(uid=1, seq_len=8, nfe=4, solver="ddim", seed=1))
+        assert shed.done()
+        evs = [ev async for ev in shed]
+        with pytest.raises(QueueFull, match="shed"):
+            await shed.result()
+        res = await h1.result()
+        return evs, res
+
+    with ServeDriver(eng, max_pending=1) as drv:
+        evs, res = asyncio.run(go(drv))
+    assert evs == [] and res.tokens.shape == (8,)
 
 
 def test_http_transport_roundtrip(diff_setup):

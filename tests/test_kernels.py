@@ -136,11 +136,10 @@ def test_ssd_kernel_matches_xla_chunked():
     np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=2e-4, atol=2e-4)
 
 
-def test_fused_absolver_matches_unfused():
-    """ABSolver(fused_update=True) routes Eq. 14 through the Pallas kernel
-    and must be numerically identical to the jnp path."""
-    from repro.core import VPSDE, get_timesteps
-    from repro.core.solvers import ABSolver
+def test_fused_plan_matches_unfused():
+    """plan_ab(fused=True) routes Eq. 14 through the Pallas kernel and must
+    be numerically identical to the jnp path."""
+    from repro.core import VPSDE, get_timesteps, plan_ab, sample
     from repro.diffusion.analytic import GaussianData
     sde = VPSDE()
     d = 8
@@ -148,7 +147,67 @@ def test_fused_absolver_matches_unfused():
     eps = g.eps_fn()
     xT = jax.random.normal(jax.random.PRNGKey(0), (16, d)) * sde.prior_std()
     ts = get_timesteps(sde, 8, "quadratic")
-    a = ABSolver(sde, ts, order=3).sample(eps, xT)
-    b = ABSolver(sde, ts, order=3, fused_update=True).sample(eps, xT)
+    a = sample(plan_ab(sde, ts, order=3), eps, xT)
+    b = sample(plan_ab(sde, ts, order=3, fused=True), eps, xT)
     np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5,
                                atol=1e-5)
+
+
+# ------------------------------------------- compiled-vs-interpret contract
+def test_deis_step_default_interpret_is_backend_resolved():
+    """The fused kernel must default to the COMPILED Pallas path everywhere a
+    compiled lowering exists (TPU: Mosaic, GPU: Triton); only the CPU backend
+    -- which has no lowering -- falls back to the Python interpreter. The old
+    default of interpret=True meant the "fused" path was slower than the
+    un-fused XLA form it claims to beat."""
+    from repro.kernels.deis_step import default_interpret
+    assert default_interpret() == (jax.default_backend() == "cpu")
+
+
+def test_deis_step_default_matches_explicit_modes():
+    """Whatever mode the backend resolves to, the default-mode kernel output
+    must equal the explicit interpret-mode oracle bit-for-bit path-wise (and
+    the reference numerically): the compiled path is guarded by numerics, not
+    trusted blind."""
+    key = jax.random.PRNGKey(11)
+    ks = jax.random.split(key, 4)
+    m, d, r = 300, 130, 3
+    x = jax.random.normal(ks[0], (m, d))
+    hist = jax.random.normal(ks[1], (r, m, d))
+    psi = jax.random.uniform(ks[2], (), jnp.float32, 0.5, 1.0)
+    coeffs = jax.random.normal(ks[3], (r,), jnp.float32)
+    got = ops.deis_step(x, hist, psi, coeffs)            # backend default
+    oracle = ops.deis_step(x, hist, psi, coeffs, interpret=True)
+    want = ref.deis_step_ref(x, hist, psi, coeffs)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(oracle),
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.skipif(jax.default_backend() == "cpu",
+                    reason="perf sanity needs a compiled Pallas lowering "
+                           "(no accelerator in this environment)")
+def test_deis_step_compiled_is_not_interpreted_speed():
+    """On an accelerator the compiled kernel must beat interpret mode by a
+    wide margin -- the regression this guards (interpret=True default) made
+    the 'fused' path orders of magnitude slower than un-fused XLA."""
+    import time
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 2)
+    x = jax.random.normal(ks[0], (2048, 512))
+    hist = jax.random.normal(ks[1], (3, 2048, 512))
+    psi = jnp.float32(0.9)
+    coeffs = jnp.array([0.5, 0.3, 0.2], jnp.float32)
+
+    def timed(**kw):
+        ops.deis_step(x, hist, psi, coeffs, **kw).block_until_ready()  # warm
+        t0 = time.perf_counter()
+        for _ in range(5):
+            out = ops.deis_step(x, hist, psi, coeffs, **kw)
+        out.block_until_ready()
+        return time.perf_counter() - t0
+
+    compiled_t = timed()                    # default: compiled on accelerator
+    interp_t = timed(interpret=True)
+    assert compiled_t * 10 < interp_t, (compiled_t, interp_t)

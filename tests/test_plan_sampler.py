@@ -1,5 +1,5 @@
-"""Plan/step sampler API: legacy-class <-> SolverPlan equivalence for every
-solver name, step-wise resume, hooks, jit/vmap composition, and the
+"""Plan/step sampler API: deprecated-factory <-> SolverPlan equivalence for
+every solver name, step-wise resume, hooks, jit/vmap composition, and the
 explicit-eta factory contract."""
 import jax
 import jax.numpy as jnp
@@ -26,16 +26,22 @@ def _kw(name):
     return {"eta": 1.0} if name == "ddim_eta" else {}
 
 
-# ------------------------------------------------- legacy <-> plan equivalence
+# --------------------------------------------- deprecated factory equivalence
 @pytest.mark.parametrize("name", SOLVER_NAMES)
-def test_legacy_class_equals_plan_path(name):
-    """Every solver name produces identical samples via the legacy class shim
-    and the SolverPlan path (deterministic: same arrays; stochastic: same
-    arrays under a fixed key)."""
+def test_deprecated_make_solver_aliases_make_plan(name):
+    """The class shims are gone: ``make_solver`` warns and returns exactly
+    the plan ``make_plan`` builds, for every solver name (so stragglers keep
+    working, one DeprecationWarning louder)."""
+    with pytest.deprecated_call():
+        legacy = make_solver(name, SDE, TS, **_kw(name))
+    plan = make_plan(name, SDE, TS, **_kw(name))
+    assert legacy.signature == plan.signature and legacy.nfe == plan.nfe
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), legacy, plan)
     eps, xT = _problem()
-    x_plan = sample(make_plan(name, SDE, TS, **_kw(name)), eps, xT, KEY)
-    x_legacy = make_solver(name, SDE, TS, **_kw(name)).sample(eps, xT, KEY)
-    np.testing.assert_array_equal(np.asarray(x_plan), np.asarray(x_legacy))
+    np.testing.assert_array_equal(
+        np.asarray(sample(legacy, eps, xT, KEY)),
+        np.asarray(sample(plan, eps, xT, KEY)))
 
 
 def test_plan_matches_hand_rolled_ddim_eta():
@@ -163,9 +169,9 @@ def test_vmap_over_batched_state():
 
 # ------------------------------------------------------------- eta contract
 def test_make_solver_ddim_eta_requires_explicit_eta():
-    """The old factory silently defaulted to eta=1.0 while DDIMSolver
+    """The old factory silently defaulted to eta=1.0 while the class shim
     defaulted to eta=0.0; both factories now require eta explicitly."""
-    with pytest.raises(TypeError, match="eta"):
+    with pytest.raises(TypeError, match="eta"), pytest.deprecated_call():
         make_solver("ddim_eta", SDE, TS)
     with pytest.raises(TypeError, match="eta"):
         make_plan("ddim_eta", SDE, TS)
@@ -173,14 +179,14 @@ def test_make_solver_ddim_eta_requires_explicit_eta():
 
 def test_ddim_eta_forwarded():
     eps, xT = _problem()
-    det = make_solver("ddim_eta", SDE, TS, eta=0.0).sample(eps, xT)
-    ddim = make_solver("ddim", SDE, TS).sample(eps, xT)
+    det = sample(make_plan("ddim_eta", SDE, TS, eta=0.0), eps, xT)
+    ddim = sample(make_plan("ddim", SDE, TS), eps, xT)
     np.testing.assert_allclose(np.asarray(det), np.asarray(ddim),
                                rtol=1e-9, atol=1e-9)
-    sto = make_solver("ddim_eta", SDE, TS, eta=1.0)
-    assert sto.plan.stochastic and sto.eta == 1.0
+    sto = make_plan("ddim_eta", SDE, TS, eta=1.0)
+    assert sto.stochastic
     assert not np.allclose(
-        np.asarray(sto.sample(eps, xT, KEY)), np.asarray(ddim))
+        np.asarray(sample(sto, eps, xT, KEY)), np.asarray(ddim))
 
 
 # ------------------------------------------------------------ stacked plans

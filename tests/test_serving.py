@@ -19,6 +19,9 @@ def test_ar_engine_matches_manual_greedy():
     prompt = np.array([1, 2, 3, 4, 5, 6, 7, 8])
     eng = ARServeEngine(params, cfg, max_len=32)
     res = eng.serve([Request(uid=0, prompt=prompt, max_new_tokens=6)])
+    # one monotonic clock domain (perf_counter): latency can never go
+    # negative, even across a wall-clock step
+    assert res[0].latency_s >= 0.0
     got = res[0].tokens
 
     # manual greedy via repeated FULL forwards (no cache) -- ground truth
@@ -41,6 +44,7 @@ def test_diffusion_engine_batches_same_shape_requests():
                                           solver="tab1", seed=0)]
     res = eng.serve(reqs)
     assert len(res) == 4
+    assert all(r.latency_s >= 0.0 and r.compile_s >= 0.0 for r in res)
     by_uid = {r.uid: r for r in res}
     assert by_uid[0].tokens.shape == (16,)
     assert by_uid[9].tokens.shape == (24,)
