@@ -181,6 +181,108 @@ def _ragged_priority_rows(params, cfg, quick: bool):
     return rows
 
 
+# ------------------------------------- continuous admission (joins) section
+def _continuous_requests(quick: bool):
+    """A staggered ragged-NFE stream in ONE ddim/euler family bucket: two
+    requests arrive per tick, so by the time later waves land, earlier
+    groups have retired rows -- exactly the boundary joins exploit."""
+    n = 8 if quick else 16
+    return [(i // 2, Request(uid=i, seq_len=32, nfe=[3, 6, 9][i % 3],
+                             solver=["ddim", "euler"][i % 2], seed=i))
+            for i in range(n)]
+
+
+def _run_continuous(params, cfg, arrivals, *, continuous: bool):
+    """Cold pass (compiles), then a warm measured pass of the staggered
+    stream under a throttled scheduler. ``continuous`` enables
+    join-at-compaction (+ compaction); off is the static-admission world
+    where every wave forms its own group and dead rows ride along.
+
+    Queue wait is per-request end-to-end time MINUS its solve latency
+    (``Result.latency_s`` counts from the row's own admission), i.e. the
+    time the scheduler left the request waiting -- pending, skipped, or
+    riding unselected groups."""
+    eng = DiffusionServeEngine(params, cfg, steps_per_tick=2, aging_ticks=4,
+                               max_group=4, compaction=continuous,
+                               join=continuous)
+
+    arrival_tick = {r.uid: at for at, r in arrivals}
+
+    def run():
+        pending = sorted(arrivals, key=lambda a: a[0])
+        i, t = 0, 0
+        t0 = time.perf_counter()
+        sub_t, results, e2e, wait_ticks = {}, [], {}, {}
+        while i < len(pending) or eng.busy:
+            while i < len(pending) and pending[i][0] <= t:
+                sub_t[pending[i][1].uid] = time.perf_counter()
+                eng.submit(pending[i][1])
+                i += 1
+            for res in eng.tick():
+                e2e[res.uid] = time.perf_counter() - sub_t[res.uid]
+                # scheduling delay in TICKS: completion tick minus arrival
+                # tick minus the request's own step count (its floor). The
+                # schedule is deterministic, so this metric is load- and
+                # machine-independent -- what the mode comparison asserts
+                # on (the wall-clock percentiles are reported, not
+                # asserted: they flex with CPU contention).
+                wait_ticks[res.uid] = (t - arrival_tick[res.uid] + 1
+                                       - res.nfe)
+                results.append(res)
+            t += 1
+        return results, e2e, wait_ticks, time.perf_counter() - t0
+
+    run()                                   # cold: compile every bucket
+    eng.wasted_row_steps = 0
+    eng.ticks = 0
+    eng.joined_requests = 0
+    executors_before = eng.num_executors
+    results, e2e, wait_ticks, wall = run()  # warm, measured
+    assert eng.num_executors == executors_before, (
+        "warm continuous-admission run recompiled: joined/compacted batches "
+        "must reuse the (signature, batch, seq_len) executor cache")
+    assert all(r.compile_s == 0.0 for r in results)
+    waits = sorted(max(0.0, e2e[r.uid] - r.latency_s) for r in results)
+    mean_wait_ticks = sum(wait_ticks.values()) / len(wait_ticks)
+    return eng, results, waits, mean_wait_ticks, wall
+
+
+def _continuous_admission_rows(params, cfg, quick: bool):
+    arrivals = _continuous_requests(quick)
+    rows, tokens, mean_wait = [], {}, {}
+    for continuous in (False, True):
+        eng, results, waits, wait_ticks, wall = _run_continuous(
+            params, cfg, arrivals, continuous=continuous)
+        tokens[continuous] = {r.uid: r.tokens for r in results}
+        mean_wait[continuous] = wait_ticks
+        rows.append({"table": "deis_serving",
+                     "solver": "continuous_admission",
+                     "joins": continuous, "requests": len(arrivals),
+                     "scheduler_ticks": eng.ticks,
+                     "joined_requests": eng.joined_requests,
+                     "wasted_row_steps": eng.wasted_row_steps,
+                     "mean_wait_ticks": round(wait_ticks, 2),
+                     "mean_wait_ms": round(
+                         sum(waits) / len(waits) * 1e3, 2),
+                     "p50_wait_ms": round(waits[len(waits) // 2] * 1e3, 2),
+                     "p99_wait_ms": round(
+                         waits[min(len(waits) - 1,
+                                   int(len(waits) * 0.99))] * 1e3, 2),
+                     "warm_recompiles": 0,
+                     "seq_per_s": round(len(arrivals) / wall, 2)})
+    # continuous admission must cut both the (deterministic, tick-counted)
+    # queue wait and the dead-row steps ...
+    assert mean_wait[True] < mean_wait[False], (
+        f"joins did not reduce mean scheduling delay "
+        f"({mean_wait[False]:.2f} -> {mean_wait[True]:.2f} ticks)")
+    assert rows[1]["wasted_row_steps"] == 0 < rows[0]["wasted_row_steps"]
+    assert rows[1]["joined_requests"] > 0
+    # ... without changing a single sample
+    for uid in tokens[True]:
+        np.testing.assert_array_equal(tokens[True][uid], tokens[False][uid])
+    return rows
+
+
 # ------------------------------------------------ sharded (8-device) section
 # Runs in a child process because the forced host-device count only takes
 # effect before jax is imported (this process already has 1 CPU device).
@@ -257,5 +359,6 @@ def run(quick: bool = False):
     rows = _throughput_rows(eng, quick)
     rows.append(_mixed_traffic_row(eng, quick))
     rows += _ragged_priority_rows(params, cfg, quick)
+    rows += _continuous_admission_rows(params, cfg, quick)
     rows += _sharded_rows(quick)
     return rows

@@ -24,11 +24,12 @@ the migration map).
 from .sde import SDE, VPSDE, VESDE, SubVPSDE, get_sde
 from .schedules import get_timesteps, SCHEDULES
 from .coeffs import ab_coefficients, ddim_coefficients_vp, naive_ei_coefficients, AB_WEIGHTS
-from .plan import (SolverPlan, inert_row, make_plan, pad_plan, plan_ab,
-                   plan_rk, plan_ddim, plan_euler, plan_em, plan_ipndm,
-                   plan_pndm, solver_stages, stack_plans, take_rows)
-from .sampler import (Hooks, SamplerState, init_state, sample, shard_state,
-                      step, take_state_rows)
+from .plan import (SolverPlan, inert_row, join_rows, make_plan, pad_plan,
+                   plan_ab, plan_rk, plan_ddim, plan_euler, plan_em,
+                   plan_ipndm, plan_pndm, solver_stages, stack_plans,
+                   take_rows)
+from .sampler import (Hooks, SamplerState, init_state, join_state_rows,
+                      sample, shard_state, step, take_state_rows)
 from .solvers import make_solver, SOLVER_NAMES
 from .likelihood import nll_bits_per_dim
 
@@ -36,11 +37,11 @@ __all__ = [
     "SDE", "VPSDE", "VESDE", "SubVPSDE", "get_sde",
     "get_timesteps", "SCHEDULES",
     "ab_coefficients", "ddim_coefficients_vp", "naive_ei_coefficients", "AB_WEIGHTS",
-    "SolverPlan", "inert_row", "make_plan", "pad_plan", "plan_ab", "plan_rk",
-    "plan_ddim", "plan_euler", "plan_em", "plan_ipndm", "plan_pndm",
-    "solver_stages", "stack_plans", "take_rows",
-    "Hooks", "SamplerState", "init_state", "sample", "shard_state", "step",
-    "take_state_rows",
+    "SolverPlan", "inert_row", "join_rows", "make_plan", "pad_plan",
+    "plan_ab", "plan_rk", "plan_ddim", "plan_euler", "plan_em", "plan_ipndm",
+    "plan_pndm", "solver_stages", "stack_plans", "take_rows",
+    "Hooks", "SamplerState", "init_state", "join_state_rows", "sample",
+    "shard_state", "step", "take_state_rows",
     "make_solver", "SOLVER_NAMES",
     "nll_bits_per_dim",
 ]

@@ -259,6 +259,70 @@ def take_rows(plan: SolverPlan, rows, shardings=None) -> SolverPlan:
     return out
 
 
+def _rowless_signature(plan: SolverPlan) -> tuple:
+    """Trace identity of a stacked plan's ROWS (leading request axis
+    stripped): two stacks whose rowless signatures match may be spliced
+    into one group without changing the executor trace family."""
+    leaves = tuple(sorted((k, tuple(v.shape[1:]), str(v.dtype))
+                          for k, v in plan.coeffs.items()))
+    return (plan.method, plan.stochastic, plan.fused,
+            tuple(plan.ts.shape[1:]), leaves)
+
+
+def join_rows(plan: SolverPlan, new_plans, shardings=None) -> SolverPlan:
+    """Splice joiner rows onto a stacked plan's request axis.
+
+    ``new_plans`` are UNSTACKED same-family plans; each is padded to the
+    stacked plan's step horizon with :func:`pad_plan` (inert zero/edge
+    padding; a joiner longer than the horizon is rejected -- it must wait
+    for a fresh group rather than force a grid extension, which would
+    change the group's signature and recompile its executor). The joined
+    plan's leading rows are the ORIGINAL stack bit-for-bit (concatenation
+    never touches them) and the appended rows are the padded joiners
+    bit-for-bit, so ``take_rows(join_rows(p, new), range(p.batch))``
+    round-trips to ``p`` exactly. The signature keeps the same family at
+    the grown batch, so the serving executor cache is looked up, never
+    re-traced, per (signature, batch, seq_len).
+
+    This is the plan half of join-at-compaction (continuous admission);
+    the state half is :func:`repro.core.sampler.join_state_rows`. Joined
+    rows start at step 0 while veterans continue at their own counts --
+    the executor's per-row ``k`` vector keeps both correct.
+
+    ``shardings`` (plan-shaped tree of shardings at the NEW batch) commits
+    the spliced leaves, mirroring :func:`take_rows`.
+    """
+    if not plan.stacked:
+        raise ValueError("join_rows splices rows onto a stacked plan")
+    new_plans = list(new_plans)
+    if not new_plans:
+        raise ValueError("join_rows requires at least one joiner plan")
+    padded = []
+    for p in new_plans:
+        if p.stacked:
+            raise ValueError("joiner plans must be unstacked (one per row)")
+        if p.n_steps > plan.n_steps:
+            raise ValueError(
+                f"cannot join a {p.n_steps}-step plan into a stack with a "
+                f"{plan.n_steps}-step horizon: extending the grid would "
+                "change the stack's signature (form a fresh group instead)")
+        padded.append(pad_plan(p, plan.n_steps))
+    add = stack_plans(padded)
+    if _rowless_signature(add) != _rowless_signature(plan):
+        raise ValueError(
+            f"joiner rows are not of the stack's family:\n  "
+            f"{_rowless_signature(plan)}\n  {_rowless_signature(add)}")
+    out = dataclasses.replace(
+        plan,
+        coeffs={k: jnp.concatenate([plan.coeffs[k], add.coeffs[k]])
+                for k in plan.coeffs},
+        ts=jnp.concatenate([plan.ts, add.ts]),
+        nfe=max(plan.nfe, add.nfe))
+    if shardings is not None:
+        out = jax.device_put(out, shardings)
+    return out
+
+
 def inert_row(plan: SolverPlan) -> SolverPlan:
     """A same-signature plan whose every step is inert: structural filler.
 

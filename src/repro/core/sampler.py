@@ -17,7 +17,12 @@ Public API:
       loop body differently than an eagerly dispatched step). ``k`` may be a
       tracer for every method (pndm's structural warmup/tail split is a
       ``lax.cond`` under a traced ``k``), so one jitted ``step`` serves all
-      step indices of a plan.
+      step indices of a plan. For a *stacked* plan ``k`` may also be a
+      per-row ``(R,)`` int vector: row ``i`` advances from its OWN step
+      ``k[i]``, which is what lets serving join a fresh request (at its
+      k=0) into a group whose veteran rows are mid-solve. A per-row ``k``
+      is clamped to the plan's grid, so retired rows riding a group past
+      their own horizon index only inert padded steps.
 
   ``init_state(plan, x_T, key=None)``
       Build the initial ``SamplerState``. Stochastic plans require a PRNG
@@ -141,6 +146,41 @@ def take_state_rows(state: SamplerState, rows, shardings=None) -> SamplerState:
     return out
 
 
+def join_state_rows(state: SamplerState, new: SamplerState,
+                    shardings=None) -> SamplerState:
+    """Splice a fresh stacked state onto an in-flight stacked solve's rows.
+
+    ``new`` is the joiners' own freshly-initialised stacked state (from
+    :func:`init_state` at their per-request keys). ``x`` and the key stack
+    concatenate on axis 0, ``hist`` on axis 1 (layout ``(history_len, R,
+    *inner)``), so the veteran rows' leaves occupy the SAME leading slots
+    bit-for-bit -- joining never moves an in-flight request. The joiners
+    carry zero eps history and their untouched key chains, exactly what a
+    solo solve starts from; stepped with a per-row ``k`` vector (their rows
+    at 0, veterans at their own counts) each joiner reproduces its solo
+    solve bitwise. ``k`` keeps the veteran state's counter (informational;
+    serving tracks per-row counts host-side). This is the state half of
+    join-at-compaction; the plan half is :func:`repro.core.plan.join_rows`.
+
+    ``shardings`` (a :class:`SamplerState` of shardings at the NEW batch)
+    commits the spliced leaves, mirroring :func:`take_state_rows`.
+    """
+    if state.key.ndim != 2 or new.key.ndim != 2:
+        raise ValueError("join_state_rows splices stacked states (per-request "
+                         "(R, 2) key stacks on both sides)")
+    if state.hist.shape[0] != new.hist.shape[0]:
+        raise ValueError(f"history length mismatch: {state.hist.shape[0]} vs "
+                         f"{new.hist.shape[0]} (joiners must share the "
+                         "group's plan family)")
+    out = SamplerState(x=jnp.concatenate([state.x, new.x], axis=0),
+                       hist=jnp.concatenate([state.hist, new.hist], axis=1),
+                       key=jnp.concatenate([state.key, new.key], axis=0),
+                       k=state.k)
+    if shardings is not None:
+        out = jax.device_put(out, shardings)
+    return out
+
+
 # ----------------------------------------------------- request-axis sharding
 def _request_shardings(plan: SolverPlan, state: SamplerState, mesh):
     """(plan, state) NamedSharding trees for data-parallel stacked execution."""
@@ -170,6 +210,22 @@ def shard_state(plan: SolverPlan, state: SamplerState, mesh):
 # ------------------------------------------------------------------ steps
 def _apply_eps(hooks: Hooks, x, t, eps):
     return eps if hooks.eps_transform is None else hooks.eps_transform(x, t, eps)
+
+
+def _at_step(v, k, stacked: bool):
+    """Per-step (or per-knot) leaf at step index ``k``.
+
+    ``v[k]`` unstacked; ``v[:, k]`` stacked under a group-uniform scalar
+    ``k``; ``v[arange(R), k]`` stacked under a per-row ``(R,)`` vector --
+    the post-join case where each row runs at its own step count. The
+    vector gather picks exactly the same elements a scalar index would when
+    all entries agree, so uniform groups stay bitwise identical across the
+    two forms."""
+    if not stacked:
+        return v[k]
+    if jnp.ndim(k) == 0:
+        return v[:, k]
+    return v[jnp.arange(v.shape[0]), k]
 
 
 def bcast(v, x):
@@ -211,9 +267,9 @@ def _step_ab(plan: SolverPlan, k, state: SamplerState, eps_fn: EpsFn,
     x, key = state.x, state.key
     if plan.stochastic:
         key, sub = _split_keys(key, stk)
-    t_k = plan.ts[:, k] if stk else plan.ts[k]
-    psi = c["psi"][:, k] if stk else c["psi"][k]
-    Cw = c["C"][:, k] if stk else c["C"][k]
+    t_k = _at_step(plan.ts, k, stk)
+    psi = _at_step(c["psi"], k, stk)
+    Cw = _at_step(c["C"], k, stk)
     eps = _apply_eps(hooks, x, t_k, eps_fn(x, t_k))
     hist = jnp.concatenate([eps[None], state.hist[:-1]], axis=0)
     if plan.fused:
@@ -232,7 +288,7 @@ def _step_ab(plan: SolverPlan, k, state: SamplerState, eps_fn: EpsFn,
     else:
         x_new = bcast(psi, x) * x + _comb(Cw, hist, stk)
     if plan.stochastic:
-        s = c["s"][:, k] if stk else c["s"][k]
+        s = _at_step(c["s"], k, stk)
         x_new = x_new + bcast(s, x) * _noise_like(sub, x, stk)
     return SamplerState(x=x_new, hist=hist, key=key, k=state.k + 1)
 
@@ -242,21 +298,21 @@ def _step_rk(plan: SolverPlan, k, state: SamplerState, eps_fn: EpsFn,
     c, stk = plan.coeffs, plan.stacked
     x = state.x
     n_stages = c["b"].shape[-1]
-    h = c["h"][:, k] if stk else c["h"][k]
-    mu = (lambda j: c["mu"][:, j]) if stk else (lambda j: c["mu"][j])
-    y = x / bcast(mu(k), x)
+    h = _at_step(c["h"], k, stk)
+    A_k = _at_step(c["A"], k, stk)                   # (R, S, S) / (S, S)
+    stage_mu = _at_step(c["stage_mu"], k, stk)       # (R, S) / (S,)
+    stage_t = _at_step(c["stage_t"], k, stk)
+    y = x / bcast(_at_step(c["mu"], k, stk), x)
     ks = jnp.zeros((n_stages,) + x.shape, x.dtype)
     for i in range(n_stages):  # static unroll over stages
-        A_ki = c["A"][:, k, i] if stk else c["A"][k, i]
-        y_i = y + bcast(h, x) * _comb(A_ki, ks, stk)
-        st_mu = c["stage_mu"][:, k, i] if stk else c["stage_mu"][k, i]
-        st_t = c["stage_t"][:, k, i] if stk else c["stage_t"][k, i]
-        x_i = bcast(st_mu, x) * y_i
+        y_i = y + bcast(h, x) * _comb(A_k[..., i, :], ks, stk)
+        x_i = bcast(stage_mu[..., i], x) * y_i
+        st_t = stage_t[..., i]
         k_i = _apply_eps(hooks, x_i, st_t, eps_fn(x_i, st_t))
         ks = ks.at[i].set(k_i)
     y = y + bcast(h, x) * _comb(c["b"], ks, stk)
-    return SamplerState(x=bcast(mu(k + 1), x) * y, hist=state.hist,
-                        key=state.key, k=state.k + 1)
+    return SamplerState(x=bcast(_at_step(c["mu"], k + 1, stk), x) * y,
+                        hist=state.hist, key=state.key, k=state.k + 1)
 
 
 _N_WARMUP = 3  # PNDM pseudo-RK4 warmup steps
@@ -266,18 +322,18 @@ def _pndm_warmup(plan: SolverPlan, k, state: SamplerState, eps_fn: EpsFn,
                  hooks: Hooks) -> SamplerState:
     """Pseudo-RK4 warmup step (4 NFE). ``k`` may be traced; warm-coefficient
     indices are clamped so the trace stays valid for any k (the tail branch
-    of the traced `lax.cond` never executes this at k >= _N_WARMUP)."""
+    of the traced `lax.cond` never executes this at k >= _N_WARMUP, and the
+    per-row mixed path masks warm rows explicitly)."""
     c, stk = plan.coeffs, plan.stacked
     x = state.x
-    kw = jnp.minimum(k, _N_WARMUP - 1) if isinstance(k, jax.core.Tracer) else k
-    if stk:
-        t_c, t_m, t_n = plan.ts[:, k], c["warm_t_mid"][:, kw], plan.ts[:, k + 1]
-        rm, cm = c["warm_ratio_m"][:, kw], c["warm_coef_m"][:, kw]
-        rn, cn = c["warm_ratio_n"][:, kw], c["warm_coef_n"][:, kw]
+    if isinstance(k, jax.core.Tracer) or jnp.ndim(k):
+        kw = jnp.minimum(k, _N_WARMUP - 1)
     else:
-        t_c, t_m, t_n = plan.ts[k], c["warm_t_mid"][kw], plan.ts[k + 1]
-        rm, cm = c["warm_ratio_m"][kw], c["warm_coef_m"][kw]
-        rn, cn = c["warm_ratio_n"][kw], c["warm_coef_n"][kw]
+        kw = k
+    t_c, t_m, t_n = (_at_step(plan.ts, k, stk), _at_step(c["warm_t_mid"], kw, stk),
+                     _at_step(plan.ts, k + 1, stk))
+    rm, cm = _at_step(c["warm_ratio_m"], kw, stk), _at_step(c["warm_coef_m"], kw, stk)
+    rn, cn = _at_step(c["warm_ratio_n"], kw, stk), _at_step(c["warm_coef_n"], kw, stk)
     rm, cm = bcast(rm, x), bcast(cm, x)
     rn, cn = bcast(rn, x), bcast(cn, x)
     e1 = _apply_eps(hooks, x, t_c, eps_fn(x, t_c))
@@ -297,17 +353,42 @@ def _pndm_tail(plan: SolverPlan, k, state: SamplerState, eps_fn: EpsFn,
                hooks: Hooks) -> SamplerState:
     c, stk = plan.coeffs, plan.stacked
     x = state.x
-    t_k = plan.ts[:, k] if stk else plan.ts[k]
-    psi = c["psi"][:, k] if stk else c["psi"][k]
-    Cw = c["C"][:, k] if stk else c["C"][k]
+    t_k = _at_step(plan.ts, k, stk)
+    psi = _at_step(c["psi"], k, stk)
+    Cw = _at_step(c["C"], k, stk)
     e = _apply_eps(hooks, x, t_k, eps_fn(x, t_k))
     hist = jnp.concatenate([e[None], state.hist[:-1]], axis=0)
     x_new = bcast(psi, x) * x + _comb(Cw, hist, stk)
     return SamplerState(x=x_new, hist=hist, key=state.key, k=state.k + 1)
 
 
+def _pndm_rowwise(plan: SolverPlan, k, state: SamplerState, eps_fn: EpsFn,
+                  hooks: Hooks) -> SamplerState:
+    """Per-row ``k`` vector: rows of a post-join group may sit on either
+    side of pndm's structural warmup/tail split. All-warmup and all-tail
+    groups stage exactly one branch via nested ``lax.cond``; a genuinely
+    mixed group computes both branches (5 net evals that step) and selects
+    rows -- joins across the warmup boundary are correct, just not free."""
+    warm = lambda st: _pndm_warmup(plan, k, st, eps_fn, hooks)
+    tail = lambda st: _pndm_tail(plan, k, st, eps_fn, hooks)
+
+    def mixed(st):
+        w, t = warm(st), tail(st)
+        m = bcast(k < _N_WARMUP, st.x)               # (R, 1, ...)
+        return SamplerState(x=jnp.where(m, w.x, t.x),
+                            hist=jnp.where(m[None], w.hist, t.hist),
+                            key=st.key, k=st.k + 1)
+
+    return jax.lax.cond(
+        jnp.all(k < _N_WARMUP), warm,
+        lambda st: jax.lax.cond(jnp.any(k < _N_WARMUP), mixed, tail, st),
+        state)
+
+
 def _step_pndm(plan: SolverPlan, k, state: SamplerState, eps_fn: EpsFn,
                hooks: Hooks) -> SamplerState:
+    if jnp.ndim(k):
+        return _pndm_rowwise(plan, k, state, eps_fn, hooks)
     if isinstance(k, jax.core.Tracer):
         # warmup and tail differ structurally (4 vs 1 net evals); under a
         # traced k both are staged and `lax.cond` executes only the taken
@@ -330,6 +411,11 @@ def step(plan: SolverPlan, k, state: SamplerState, eps_fn: EpsFn, *,
          hooks: Optional[Hooks] = None, mesh=None) -> SamplerState:
     """Advance one solver step: ``state`` at time ``ts[k]`` -> ``ts[k+1]``.
 
+    For a stacked plan ``k`` may be a per-row ``(R,)`` int vector: row ``i``
+    steps from ITS index ``k[i]`` (a serving group whose rows were admitted
+    at different ticks). Entries are clamped to the plan's grid, so a row
+    riding past its own horizon indexes only inert padded coefficients.
+
     ``mesh`` (a ``jax.sharding.Mesh`` with a data-like axis) places the
     stacked request axis of every state/plan leaf with a ``NamedSharding``
     before stepping -- data-parallel execution over requests. Sharding never
@@ -338,6 +424,10 @@ def step(plan: SolverPlan, k, state: SamplerState, eps_fn: EpsFn, *,
     pass no mesh here.
     """
     plan = plan.astype(state.x.dtype)
+    if jnp.ndim(k):
+        if not plan.stacked:
+            raise ValueError("a per-row k vector requires a stacked plan")
+        k = jnp.minimum(jnp.asarray(k, jnp.int32), plan.n_steps - 1)
     if mesh is not None:
         plan, state = shard_state(plan, state, mesh)
     return _STEPPERS[plan.method](plan, k, state, eps_fn, hooks or _DEFAULT_HOOKS)

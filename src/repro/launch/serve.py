@@ -181,6 +181,15 @@ def main():
     ap.add_argument("--steps-per-tick", type=int, default=None,
                     help="throttle: groups stepped per tick (enables EDF)")
     ap.add_argument("--no-compaction", action="store_true")
+    ap.add_argument("--no-join", action="store_true",
+                    help="disable continuous admission (joining pending "
+                         "requests into in-flight groups at compaction "
+                         "boundaries)")
+    ap.add_argument("--seq-len-buckets", default=None,
+                    help="comma-separated ascending edges (e.g. 32,64,128): "
+                         "request seq_lens round up to a bucket edge so "
+                         "nearby lengths share one compiled executor; "
+                         "decodes are masked back to each request's length")
     ap.add_argument("--max-pending", type=int, default=None,
                     help="driver backpressure: bound on in-flight requests; "
                          "over it, submits are shed with QueueFull (HTTP 429)")
@@ -207,9 +216,13 @@ def main():
             mesh = make_request_mesh()
             print(f"request-parallel mesh: {jax.device_count()} devices on "
                   "axis 'data' (group sizes round up to multiples)")
+        buckets = tuple(int(e) for e in args.seq_len_buckets.split(",")) \
+            if args.seq_len_buckets else None
         eng = DiffusionServeEngine(params, cfg,
                                    steps_per_tick=args.steps_per_tick,
                                    compaction=not args.no_compaction,
+                                   join=not args.no_join,
+                                   seq_len_buckets=buckets,
                                    mesh=mesh)
         if args.transport == "http":
             with ServeDriver(eng, max_pending=args.max_pending) as driver:

@@ -272,6 +272,7 @@ class ServeDriver:
         eng = self.engine
         return {"ticks": eng.ticks, "executors": eng.num_executors,
                 "wasted_row_steps": eng.wasted_row_steps,
+                "joined_requests": eng.joined_requests,
                 "in_flight": len(self._streams),
                 "max_pending": self.max_pending}
 
@@ -297,18 +298,26 @@ class ServeDriver:
                 stream._fail(e)
 
     def _fanout(self, event: StepEvent) -> None:
-        """Engine ``on_step`` callback: slice the group event per request."""
+        """Engine ``on_step`` callback: slice the group event per request.
+
+        ``row_k`` carries each request's OWN completed step count (a joiner
+        spliced into an in-flight group counts from its admission tick), and
+        ``row_seq_lens`` its true length (bucketed admission solves at the
+        bucket edge; streamed decodes are masked back to the request)."""
         for i, uid in enumerate(event.uids):
             stream = self._streams.get(uid)
             if stream is None:
                 continue   # submitted directly to the engine, or finished
             row_n = event.row_steps[i] if event.row_steps else event.n_steps
-            if event.k > row_n:
+            row_k = event.row_k[i] if event.row_k else event.k
+            if row_k > row_n:
                 continue   # retired row still riding an uncompacted group
             tok = event.tokens[i] if event.tokens is not None else None
+            if tok is not None and event.row_seq_lens:
+                tok = tok[:event.row_seq_lens[i]]
             stream._push(dataclasses.replace(
-                event, uids=(uid,), k=min(event.k, row_n), n_steps=row_n,
-                tokens=tok, row_steps=None))
+                event, uids=(uid,), k=min(row_k, row_n), n_steps=row_n,
+                tokens=tok, row_steps=None, row_k=None, row_seq_lens=None))
 
     def _crash(self, exc: BaseException) -> None:
         """A tick blew up: the engine's in-flight state is unreliable, so

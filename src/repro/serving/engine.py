@@ -11,14 +11,29 @@ Diffusion serving semantics
 Admission.  ``submit()`` enqueues; at every scheduler ``tick()`` pending
 requests are admitted into *groups* at a step boundary. A group stacks up to
 ``max_group`` requests whose plans share one :attr:`SolverPlan.family` and
-whose ``seq_len`` matches -- solver *names* may differ (ddim / euler /
-naive_ei stack into a single solve via :func:`repro.core.plan.stack_plans`)
-and so may NFE budgets: shorter plans are padded to the bucket's longest
-grid with :func:`repro.core.plan.pad_plan` (*ragged* groups). Each request
-gets its own PRNG key derived from its own ``Request.seed``, so samples are
-per-request reproducible regardless of batch composition, admission time, or
-compaction. Requests never join a group mid-solve; they form a new group
-that is interleaved with the groups already in flight.
+whose (bucketed) ``seq_len`` matches -- solver *names* may differ (ddim /
+euler / naive_ei stack into a single solve via
+:func:`repro.core.plan.stack_plans`) and so may NFE budgets: shorter plans
+are padded to the bucket's longest grid with
+:func:`repro.core.plan.pad_plan` (*ragged* groups). Each request gets its
+own PRNG key derived from its own ``Request.seed``, so samples are
+per-request reproducible regardless of batch composition, admission time,
+joining, or compaction.
+
+Admission is *continuous*: at every compaction boundary (a tick after rows
+retired, or a group carrying structural filler slots) pending same-bucket
+requests may **join** the surviving in-flight group instead of waiting for
+a fresh one -- joiner plan rows are padded to the group's grid and spliced
+(:func:`repro.core.plan.join_rows` / ``join_state_rows``), and the executor
+steps every row at its OWN count (a per-row ``k`` vector: joiners start at
+0 while veterans continue), so a warm ragged workload converges to a small
+fixed set of ``(family, batch, seq_len)`` executors that never drain and
+never recompile. A joiner whose grid exceeds the group's horizon forms a
+fresh group instead (extending the grid would change the signature).
+``seq_len_buckets=(...)`` additionally rounds request lengths up to bucket
+edges (the solve carries the tail as extra latent positions; every emitted
+decode is masked back to the request's true ``seq_len``), so e.g. seq 48
+and 64 share one executor cache entry.
 
 Scheduling.  A tick selects up to ``steps_per_tick`` groups (default: all)
 and advances each by ONE solver step, so a newly admitted 5-NFE request
@@ -32,23 +47,28 @@ deadline sorts last), then admission order. With the default
 only decides dispatch order; a throttled driver (``steps_per_tick=k``) gets
 true earliest-deadline-first with guaranteed progress for starved work.
 
-Completion & compaction.  Rows of a ragged group finish at their OWN step
-count: a finished row's Result is emitted from that very tick (its latency
-is the group's accumulated solve time so far), not when the whole group
-drains. With ``compaction=True`` (default) the group is then *compacted*:
-surviving rows are row-gathered (:func:`repro.core.plan.take_rows` +
+Completion, compaction & refill.  Rows of a ragged group finish at their
+OWN step count (``g.k - k0 == n_steps``; a joiner's ``k0`` is its admission
+tick): a finished row's Result is emitted from that very tick (its latency
+is the group's solve time accumulated since ITS admission), not when the
+whole group drains. With ``compaction=True`` (default) the group rebuilds
+at the next tick's admission boundary, before it steps again: freed rows
+are refilled with pending joiners, or the survivors are row-gathered
+(:func:`repro.core.plan.take_rows` +
 :func:`repro.core.sampler.take_state_rows`) into a smaller
 ``(signature, batch, seq_len)`` bucket and keep stepping there, instead of
-burning evals on retired rows. Compaction preserves bitwise per-request
+burning evals on retired rows. Both moves preserve bitwise per-request
 reproducibility because every per-row quantity -- coefficients, iterate,
 eps history, PRNG key chain -- moves whole. ``wasted_row_steps`` counts the
-steps executed on already-finished rows (zero under compaction; the
-no-compaction baseline pays one per dead row per tick).
+steps executed on already-finished rows (zero under compaction -- joined
+slots and structural filler excluded; the no-compaction baseline pays one
+per dead row per tick).
 
 Compile cache.  One jitted ``step`` is AOT-compiled per
 ``(plan.signature, batch, seq_len)`` and reused across groups, solver names
-and step indices (``k`` is a traced argument; pndm's warmup/tail split is a
-``lax.cond``). Compaction looks its smaller batch up in the same cache, so a
+and step indices (``k`` is traced as a PER-ROW vector, so the same
+executable serves uniform groups and post-join groups whose rows run at
+their own counts; pndm's warmup/tail split is a ``lax.cond``). Compaction looks its smaller batch up in the same cache, so a
 steady-state workload (e.g. the warm half of ``benchmarks/deis_serving``)
 runs with ZERO recompilation. ``Result.compile_s`` carries the trace+compile
 cost charged to the group that needed the executor; ``Result.latency_s`` is
@@ -81,8 +101,8 @@ import numpy as np
 from ..configs.base import ModelConfig
 from ..core import get_timesteps, make_plan
 from ..core import sampler as SAMPLER
-from ..core.plan import (SolverPlan, inert_row, pad_plan, solver_stages,
-                         stack_plans, take_rows)
+from ..core.plan import (SolverPlan, inert_row, join_rows, pad_plan,
+                         solver_stages, stack_plans, take_rows)
 from ..core.sde import SDE, VPSDE
 from ..diffusion import lm as DLM
 from ..models import transformer as T
@@ -114,34 +134,47 @@ class Request:
 @dataclasses.dataclass
 class Result:
     """Final per-request outcome. ``latency_s`` is the request's group solve
-    time accumulated up to the tick ITS row finished (ragged rows finish
-    early); ``nfe`` is the true evals its own plan spent (never the padded
-    group's); ``compile_s`` is trace+compile charged to its group."""
+    time accumulated from ITS OWN admission tick (a joiner is not charged
+    the group's pre-join solve time) up to the tick its row finished (ragged
+    rows finish early); ``nfe`` is the true evals its own plan spent (never
+    the padded group's); ``compile_s`` is trace+compile charged to its
+    group; ``queue_wait_s`` is the time the request spent pending before
+    entering a group (fresh admission or join)."""
     uid: int
     tokens: np.ndarray
-    latency_s: float            # solve wall-time of the request's group,
-                                # EXCLUDING compile/trace (see compile_s)
+    latency_s: float            # solve wall-time of the request's group
+                                # since ITS admission, EXCLUDING
+                                # compile/trace (see compile_s)
     nfe: int = 0                # true network evals spent (plan.nfe)
     compile_s: float = 0.0      # trace+compile charged to this group's
                                 # executor; 0.0 on a warm compile cache
+    queue_wait_s: float = 0.0   # submit -> admission (join or fresh group)
 
 
 @dataclasses.dataclass
 class StepEvent:
     """Per-step progress emitted to the ``on_step`` serving callback.
 
-    In a ragged group ``n_steps`` is the LONGEST member's step count;
-    ``row_steps[i]`` is request ``uids[i]``'s own total, so per-request
-    progress is ``min(k, row_steps[i]) / row_steps[i]`` (this is what the
-    driver reports on each request's stream).
+    In a ragged group ``n_steps`` is the group's drain horizon (the longest
+    live ``admission step + own step count``); ``row_steps[i]`` is request
+    ``uids[i]``'s own total and ``row_k[i]`` its own completed count (a
+    joiner's count starts at its admission tick, not group birth), so
+    per-request progress is ``min(row_k[i], row_steps[i]) / row_steps[i]``
+    (this is what the driver reports on each request's stream).
     """
     uids: tuple                      # requests in the group that just stepped
-    k: int                           # steps completed (1-based after the step)
-    n_steps: int                     # total solver steps for this group
+    k: int                           # group steps completed (1-based after
+                                     # the step; joiners admit at k > 0)
+    n_steps: int                     # total group steps to drain
     tokens: Optional[np.ndarray] = None  # (R, seq_len) partial decode when
-                                         # serve(stream_decode=True)
+                                         # serve(stream_decode=True); rows at
+                                         # the group's BUCKETED seq_len
     row_steps: Optional[tuple] = None    # per-request true step counts
                                          # (aligned with uids)
+    row_k: Optional[tuple] = None        # per-request completed step counts
+                                         # (aligned with uids)
+    row_seq_lens: Optional[tuple] = None  # per-request TRUE seq_lens (for
+                                          # slicing bucketed decodes)
 
 
 class ARServeEngine:
@@ -204,15 +237,29 @@ _PNDM_WARMUP_EXTRA = 9
 
 
 @dataclasses.dataclass
+class _Pending:
+    """A submitted request waiting for admission (fresh group or join)."""
+    req: Request
+    plan: SolverPlan            # unstacked, at the request's own grid
+    t_sub: float                # perf_counter at submit (deadline anchor)
+    s_len: int                  # BUCKETED seq_len the solve runs at
+
+
+@dataclasses.dataclass
 class _Row:
     """Per-request bookkeeping inside a (possibly ragged) group.
 
     ``pad`` rows are structural filler, not requests: sharded admission
     rounds group sizes up to a multiple of the mesh's data-axis size with
-    inert rows (``req is None``), and sharded compaction may retain a
-    retired request's row as filler (``req`` kept, ``pad`` flipped). Pad
+    inert rows (``req is None``), and sharded compaction/joining may retain
+    a retired request's row as filler (``req`` kept, ``pad`` flipped). Pad
     rows never emit Results, never appear in StepEvents, and never count as
     wasted steps -- they exist so the stacked axis always places evenly.
+
+    ``k0`` is the group step count at this row's admission: a joiner starts
+    solving at group step ``k0`` and its own step count is ``g.k - k0`` --
+    completion, progress, NFE and latency accounting all run on that own
+    count, never on the group's age.
     """
     req: Request | None
     n_steps: int                # TRUE solver steps of this request's own plan
@@ -220,21 +267,27 @@ class _Row:
     deadline: float             # absolute deadline (inf when best-effort)
     done: bool = False          # Result already emitted
     pad: bool = False           # structural filler row (see class docstring)
+    k0: int = 0                 # group step count at this row's admission
+    solve_s0: float = 0.0       # group solve_s at this row's admission
+    wait_s: float = 0.0         # submit -> admission queue wait
 
 
 @dataclasses.dataclass
 class _Group:
-    """One in-flight stacked solve (requests admitted together).
+    """One in-flight stacked solve (requests admitted together or joined).
 
-    ``rows`` shrinks under compaction; ``k`` keeps counting from admission
-    (row completion is ``k == row.n_steps`` regardless of compaction).
+    ``rows`` shrinks under compaction and refills under joining; ``k``
+    keeps counting from group birth (row completion is
+    ``g.k - row.k0 == row.n_steps``).
     """
     rows: list                  # list[_Row], aligned with the stacked axis
     sig: tuple                  # member plans' (padded, unstacked) signature
+    bucket: tuple               # admission bucket key (plan.family, s_len)
+    seq_len: int                # bucketed seq_len the stacked solve runs at
     plan: SolverPlan            # stacked: leading request axis on all leaves
     state: SAMPLER.SamplerState
     fn: Callable                # AOT-compiled step(params, plan, k, state)
-    n_steps: int                # max live row n_steps (event horizon)
+    n_steps: int                # max live row k0 + n_steps (drain horizon)
     compile_s: float            # 0.0 when the executor cache was warm
     priority: int               # max member Request.priority
     deadline: float             # min member absolute deadline (inf if none)
@@ -265,12 +318,28 @@ class DiffusionServeEngine:
     def __init__(self, params, cfg: ModelConfig, sde: Optional[SDE] = None,
                  schedule: str = "quadratic", max_group: int = 8,
                  steps_per_tick: int | None = None, aging_ticks: int = 8,
-                 compaction: bool = True, mesh=None):
+                 compaction: bool = True, join: bool = True,
+                 seq_len_buckets=None, mesh=None):
         """``steps_per_tick``: groups advanced per tick (None = all active,
         the PR-2 behavior; an int enables true EDF selection).
         ``aging_ticks``: skipped ticks per +1 effective-priority boost
         (starvation aging). ``compaction``: retire finished rows mid-flight
         and re-pack survivors into a smaller cached batch bucket.
+
+        ``join``: continuous admission -- at every compaction boundary,
+        pending same-bucket requests are spliced into the surviving group
+        (retired rows become slots) instead of forming a fresh group, under
+        the same priority/EDF ordering as admission. Requires ``compaction``
+        (boundaries are where groups rebuild); with ``compaction=False``
+        the flag is inert.
+
+        ``seq_len_buckets``: ascending edge lengths; a request's seq_len
+        rounds UP to the first edge that fits, the solve runs at the bucket
+        length (tail positions ride as extra latent positions and are
+        masked out of every emitted decode), and requests longer than the
+        last edge run at their exact length. Bucketing trades a little
+        compute on tail positions for executor reuse: seq 48 and 64 under
+        a 64 edge share one (signature, batch, 64) compile-cache entry.
 
         ``mesh``: a ``jax.sharding.Mesh`` with a data-like axis (e.g.
         :func:`repro.launch.mesh.make_request_mesh`) shards every stacked
@@ -290,6 +359,15 @@ class DiffusionServeEngine:
             else max(1, steps_per_tick)
         self.aging_ticks = max(1, aging_ticks)
         self.compaction = compaction
+        self.join = join
+        if seq_len_buckets is not None:
+            edges = tuple(int(e) for e in seq_len_buckets)
+            if not edges or any(e < 1 for e in edges) or \
+                    list(edges) != sorted(set(edges)):
+                raise ValueError("seq_len_buckets must be strictly ascending "
+                                 f"positive edges, got {seq_len_buckets!r}")
+            seq_len_buckets = edges
+        self.seq_len_buckets = seq_len_buckets
         self.mesh = mesh
         if mesh is not None:
             from ..launch.mesh import mesh_fingerprint
@@ -326,11 +404,13 @@ class DiffusionServeEngine:
         self._plans: dict = {}      # (solver, nfe, eta) -> SolverPlan
         self._compiled: dict = {}   # (signature, batch, seq_len, mesh_key)
                                     #   -> AOT step
-        self._pending: deque = deque()   # (Request, SolverPlan, t_submit)
+        self._pending: deque = deque()   # deque[_Pending]
         self._active: list[_Group] = []
         self._arrivals = 0          # admission sequence counter
         self.ticks = 0              # scheduler ticks executed (metric)
         self.wasted_row_steps = 0   # steps burned on already-finished rows
+        self.joined_requests = 0    # requests admitted by joining an
+                                    # in-flight group (metric)
 
     # ------------------------------------------------------------- plans
     def _plan(self, solver: str, nfe: int, eta: float | None) -> SolverPlan:
@@ -377,26 +457,41 @@ class DiffusionServeEngine:
         def run(params, plan_arg, k, st):
             return SAMPLER.step(plan_arg, k, st, DLM.make_eps_fn(params, cfg))
 
+        # k is lowered as a PER-ROW (R,) step vector: one trace serves both
+        # groups admitted whole (all entries equal -- bitwise identical to a
+        # scalar k) and post-join groups whose rows run at their own counts.
+        k0 = jnp.zeros((state.x.shape[0],), jnp.int32)
         t0 = time.perf_counter()
         if self.mesh is None:
             jitted = jax.jit(run)
         else:
+            from ..sharding.rules import step_index_specs, to_shardings
             plan_sh, state_sh = self._shardings(plan, state)
             param_sh = jax.sharding.NamedSharding(
                 self.mesh, jax.sharding.PartitionSpec())
-            jitted = jax.jit(run, in_shardings=(param_sh, plan_sh, None,
+            k_sh = to_shardings(step_index_specs(k0, self.mesh), self.mesh)
+            jitted = jax.jit(run, in_shardings=(param_sh, plan_sh, k_sh,
                                                 state_sh),
                              out_shardings=state_sh)
-        compiled = jitted.lower(self._params_exec, plan, jnp.int32(0),
-                                state).compile()
+        compiled = jitted.lower(self._params_exec, plan, k0, state).compile()
         compile_s = time.perf_counter() - t0
         self._compiled[key_] = compiled
         return compiled, compile_s
 
     # -------------------------------------------------------- scheduling
+    def _bucket_len(self, seq_len: int) -> int:
+        """Bucketed solve length: the first edge >= seq_len, or the exact
+        length when no edge fits (or bucketing is off)."""
+        if self.seq_len_buckets is not None:
+            for edge in self.seq_len_buckets:
+                if seq_len <= edge:
+                    return edge
+        return seq_len
+
     def submit(self, request: Request) -> None:
-        """Validate and enqueue; the request is admitted into a group at the
-        next tick. Validation (unknown solver, ddim_eta without eta) raises
+        """Validate and enqueue; the request is admitted at the next tick --
+        into a fresh group, or spliced into an in-flight one at a compaction
+        boundary. Validation (unknown solver, ddim_eta without eta) raises
         HERE, before the request enters the queue, so a bad request can never
         strand already-queued work mid-admission. The submit timestamp
         anchors the request's absolute deadline (``deadline_s`` is relative
@@ -411,48 +506,86 @@ class DiffusionServeEngine:
         # perf_counter everywhere: one monotonic clock domain for deadlines,
         # solve timing and compile timing (mixing in wall-clock time.time()
         # was the old LM-loop bug -- negative latencies across a clock step).
-        self._pending.append((request, plan, time.perf_counter()))
+        self._pending.append(_Pending(request, plan, time.perf_counter(),
+                                      self._bucket_len(request.seq_len)))
 
     @staticmethod
     def _abs_deadline(req: Request, t_submit: float) -> float:
         return math.inf if req.deadline_s is None else t_submit + req.deadline_s
 
+    def _group_key(self, g: _Group) -> tuple:
+        """Urgency ordering shared by ``_select`` and the join/compact
+        boundary pass: effective priority desc (starvation aging), earliest
+        absolute deadline, admission order."""
+        return (-(g.priority + g.skipped // self.aging_ticks),
+                g.deadline, g.arrival)
+
     def _admit(self) -> None:
-        """Form new groups from everything pending (step-boundary admission).
+        """Admit everything pending (step-boundary admission).
 
-        Bucketing is by (plan.family, seq_len): any mix of solver names AND
-        NFE budgets whose plans pad+stack is one solve (ragged groups).
-        Within a bucket the most urgent requests (priority desc, deadline
-        asc) are chunked first; buckets larger than ``max_group`` split into
-        multiple groups.
+        Two phases, both ordered by the same urgency key (priority desc,
+        deadline asc):
 
-        Under a mesh, each chunk is rounded UP to a multiple of the data-axis
-        size with inert filler rows (:func:`repro.core.plan.inert_row`): the
-        stacked axis then always divides the mesh's data axes, so every group
-        places evenly and the executor cache sees only multiple-of-axis batch
-        sizes. Chunking itself is quantized to ``(max_group // axis) * axis``
-        so rounding can never exceed the operator's ``max_group`` bound.
-        Filler rows are born ``done`` -- they emit nothing, cost no extra
-        wall-clock in a data-parallel step, and retire for free with the
-        group."""
-        if not self._pending:
-            return
+        1. *Boundary pass* (``compaction`` on): every group carrying
+           retired/filler rows rebuilds before its next step -- pending
+           same-bucket requests whose grids fit the group's horizon JOIN it
+           (retired rows become slots; ``join`` on), and what cannot be
+           refilled compacts down to its survivors. Groups are visited in
+           ``_select``'s urgency order, so the most urgent in-flight work
+           gets the most urgent joiners.
+        2. *Fresh groups*: remaining pending requests bucket by
+           ``(plan.family, bucketed seq_len)`` -- any mix of solver names
+           AND NFE budgets whose plans pad+stack is one solve (ragged
+           groups) -- and chunk at ``max_group``.
+
+        Under a mesh, each chunk/join target is rounded UP to a multiple of
+        the data-axis size with inert filler rows
+        (:func:`repro.core.plan.inert_row`): the stacked axis then always
+        divides the mesh's data axes, so every group places evenly and the
+        executor cache sees only multiple-of-axis batch sizes. Chunking is
+        quantized to ``(max_group // axis) * axis`` so rounding can never
+        exceed the operator's ``max_group`` bound. Filler rows are born
+        ``done`` -- they emit nothing, cost no extra wall-clock in a
+        data-parallel step, and are first in line to become join slots."""
+        now = time.perf_counter()
         buckets: dict = {}
         while self._pending:
-            r, plan, t_sub = self._pending.popleft()
-            buckets.setdefault((plan.family, r.seq_len),
-                               []).append((r, plan, t_sub))
-        for (_fam, seq_len), items in buckets.items():
-            items.sort(key=lambda it: (-it[0].priority,
-                                       self._abs_deadline(it[0], it[2])))
+            p = self._pending.popleft()
+            buckets.setdefault((p.plan.family, p.s_len), []).append(p)
+        for items in buckets.values():
+            items.sort(key=lambda it: (-it.req.priority,
+                                       self._abs_deadline(it.req, it.t_sub)))
+        if self.compaction:
+            for g in sorted(self._active, key=self._group_key):
+                if not any(r.done for r in g.rows):
+                    continue
+                cands = buckets.get(g.bucket) if self.join else None
+                if cands and self._join_group(g, cands, now):
+                    continue
+                live = [i for i, r in enumerate(g.rows) if not r.done]
+                keep = self._compact_target(g, live)
+                if keep is not None:
+                    self._compact(g, keep)
+                else:
+                    # the group already sits at the smallest placeable
+                    # multiple of the data axis (mesh only: unsharded groups
+                    # always shrink): its retired rows are structurally
+                    # required filler -- same status as rows retained by a
+                    # compaction -- not waste (and open join slots)
+                    for r in g.rows:
+                        if r.done:
+                            r.pad = True
+        for (_fam, s_len), items in buckets.items():
             for i in range(0, len(items), self._chunk_cap):
                 chunk = items[i:i + self._chunk_cap]
-                n_max = max(p.n_steps for _, p, _ in chunk)
-                padded = [pad_plan(p, n_max) for _, p, _ in chunk]
-                rows = [_Row(req=r, n_steps=p.n_steps, nfe=p.nfe,
-                             deadline=self._abs_deadline(r, t))
-                        for (r, p, t) in chunk]
-                seeds = [r.seed for r, _, _ in chunk]
+                n_max = max(p.plan.n_steps for p in chunk)
+                padded = [pad_plan(p.plan, n_max) for p in chunk]
+                rows = [_Row(req=p.req, n_steps=p.plan.n_steps,
+                             nfe=p.plan.nfe,
+                             deadline=self._abs_deadline(p.req, p.t_sub),
+                             wait_s=now - p.t_sub)
+                        for p in chunk]
+                seeds = [p.req.seed for p in chunk]
                 n_fill = (-len(chunk)) % self._data_size
                 if n_fill:
                     filler = inert_row(padded[0])
@@ -465,21 +598,93 @@ class DiffusionServeEngine:
                 plan = stack_plans(padded)
                 keys = DLM.request_keys(seeds)
                 state = DLM.init_sample_state(
-                    self.cfg, plan, keys, seq_len=seq_len,
+                    self.cfg, plan, keys, seq_len=s_len,
                     prior_std=self.sde.prior_std())
                 fn, compile_s = self._executor(sig, plan, state)
                 plan_sh, state_sh = self._shardings(plan, state)
                 if plan_sh is not None:
                     plan = jax.device_put(plan, plan_sh)
                     state = jax.device_put(state, state_sh)
-                reqs = [r for r, _, _ in chunk]
+                reqs = [p.req for p in chunk]
                 self._arrivals += 1
                 self._active.append(_Group(
-                    rows=rows, sig=sig, plan=plan, state=state, fn=fn,
+                    rows=rows, sig=sig, bucket=(_fam, s_len), seq_len=s_len,
+                    plan=plan, state=state, fn=fn,
                     n_steps=n_max, compile_s=compile_s,
                     priority=max(r.priority for r in reqs),
                     deadline=min(r.deadline for r in rows),
                     arrival=self._arrivals))
+
+    def _join_group(self, g: _Group, cands: list, now: float) -> bool:
+        """Splice pending requests into ``g`` at a compaction boundary.
+
+        ``cands`` is the group's admission bucket, urgency-sorted; joiners
+        are taken from the front, skipping any whose grid exceeds the
+        group's horizon (they form fresh groups instead -- extending the
+        grid would change the signature and recompile). The rebuilt batch
+        keeps the surviving rows in their original relative order, each
+        carried whole and bitwise-unmoved (``take_rows`` of the survivors,
+        then ``join_rows`` appending the padded joiners), rounds up to a
+        data-axis multiple reusing retired rows as slots before allocating
+        inert filler, and stays within ``max_group``. Joiner
+        rows record ``k0 = g.k`` (their steps count from THIS tick) and
+        ``solve_s0`` (their latency excludes the group's past). Returns
+        False when nothing could join (caller falls back to compaction)."""
+        live = [i for i, r in enumerate(g.rows) if not r.done]
+        cap = self._chunk_cap - len(live)
+        if cap <= 0:
+            return False
+        take, rest = [], []
+        for p in cands:
+            if len(take) < cap and p.plan.n_steps <= g.plan.n_steps:
+                take.append(p)
+            else:
+                rest.append(p)
+        if not take:
+            return False
+        cands[:] = rest
+        keep, n_inert = self._round_keep(g, live, len(take))
+        plan_sh, state_sh = self._shardings(g.plan, g.state)
+        if keep != list(range(len(g.rows))):
+            # the intermediate gather may not be a data-axis multiple (e.g.
+            # 8 rows -> 4 survivors before 4 joiners splice back to 8), so
+            # it stays uncommitted; only the FINAL spliced batch -- always
+            # a multiple -- is placed (join_rows/join_state_rows below)
+            g.plan = take_rows(g.plan, keep)
+            g.state = SAMPLER.take_state_rows(g.state, keep)
+            g.rows = [g.rows[i] for i in keep]
+        for r in g.rows:
+            if r.done:          # retained retired row: structural filler
+                r.pad = True
+        padded = [pad_plan(p.plan, g.plan.n_steps) for p in take]
+        seeds = [p.req.seed for p in take]
+        new_rows = [_Row(req=p.req, n_steps=p.plan.n_steps, nfe=p.plan.nfe,
+                         deadline=self._abs_deadline(p.req, p.t_sub),
+                         k0=g.k, solve_s0=g.solve_s, wait_s=now - p.t_sub)
+                    for p in take]
+        if n_inert:
+            filler = inert_row(padded[0])
+            padded += [filler] * n_inert
+            seeds += [0] * n_inert
+            new_rows += [_Row(req=None, n_steps=0, nfe=0, deadline=math.inf,
+                              done=True, pad=True, k0=g.k)
+                         for _ in range(n_inert)]
+        keys = DLM.request_keys(seeds)
+        add_state = DLM.init_sample_state(
+            self.cfg, stack_plans(padded), keys, seq_len=g.seq_len,
+            prior_std=self.sde.prior_std())
+        g.plan = join_rows(g.plan, padded, shardings=plan_sh)
+        g.state = SAMPLER.join_state_rows(g.state, add_state,
+                                          shardings=state_sh)
+        g.rows += new_rows
+        live_rows = [r for r in g.rows if not r.done]
+        g.n_steps = max(r.k0 + r.n_steps for r in live_rows)
+        g.priority = max(r.req.priority for r in live_rows)
+        g.deadline = min(r.deadline for r in live_rows)
+        g.fn, compile_s = self._executor(g.sig, g.plan, g.state)
+        g.compile_s += compile_s
+        self.joined_requests += len(take)
+        return True
 
     def _select(self) -> tuple[list[_Group], list[_Group]]:
         """Order active groups by urgency; return (stepped, skipped).
@@ -489,32 +694,43 @@ class DiffusionServeEngine:
         everything at a fixed priority -- no starvation), then earliest
         absolute deadline, then admission order. ``steps_per_tick=None``
         steps every group (ordering = dispatch order only)."""
-        order = sorted(
-            self._active,
-            key=lambda g: (-(g.priority + g.skipped // self.aging_ticks),
-                           g.deadline, g.arrival))
+        order = sorted(self._active, key=self._group_key)
         if self.steps_per_tick is None:
             return order, []
         return order[:self.steps_per_tick], order[self.steps_per_tick:]
+
+    def _round_keep(self, g: _Group, live: list[int],
+                    n_new: int) -> tuple[list[int], int]:
+        """Rebuild arithmetic shared by compaction and joining.
+
+        The rebuilt batch is ``len(live) + n_new`` rounded up to a
+        data-axis multiple; the round-up gap is filled with already-retired
+        rows kept as structural padding (original filler first, then
+        retired requests, lowest index first). Returns ``(keep, n_inert)``:
+        the row indices to gather (live + retained filler, original order)
+        and how many fresh inert rows must still be allocated when retired
+        rows alone cannot cover the gap (only possible while joining --
+        compaction's target never exceeds the current batch)."""
+        target = len(live) + n_new
+        target += (-target) % self._data_size
+        fillers = [i for i, r in enumerate(g.rows) if r.done]
+        fillers.sort(key=lambda i: (not g.rows[i].pad, i))
+        reuse = fillers[:max(0, target - len(live) - n_new)]
+        return (sorted(live + reuse),
+                target - len(live) - n_new - len(reuse))
 
     def _compact_target(self, g: _Group, live: list[int]) -> list[int] | None:
         """Row indices to KEEP when compacting ``g``, or None to skip.
 
         Unsharded: keep exactly the live rows (compact whenever any row
         retired). Under a mesh the kept count must stay a multiple of the
-        data-axis size, so the target rounds up and the gap is filled with
-        already-retired rows (original filler first, then retired requests,
-        lowest index first) which are kept as structural padding; when the
-        rounded target equals the current batch there is nothing to shrink
-        and compaction is skipped (no resharding, no recompile, no churn).
+        data-axis size (:meth:`_round_keep`); when the rounded target
+        equals the current batch there is nothing to shrink and compaction
+        is skipped (no resharding, no recompile, no churn).
         """
-        target = len(live) + ((-len(live)) % self._data_size)
-        if target >= len(g.rows):
+        keep, _ = self._round_keep(g, live, 0)
+        if len(keep) >= len(g.rows):
             return None
-        # done rows ARE the non-live rows (live = every not-done index)
-        fillers = [i for i, r in enumerate(g.rows) if r.done]
-        fillers.sort(key=lambda i: (not g.rows[i].pad, i))
-        keep = sorted(live + fillers[:target - len(live)])
         return keep
 
     def _compact(self, g: _Group, keep: list[int]) -> None:
@@ -540,7 +756,7 @@ class DiffusionServeEngine:
                 r.pad = True        # retained retired row: structural filler
             else:
                 live.append(r)
-        g.n_steps = max(r.n_steps for r in live)
+        g.n_steps = max(r.k0 + r.n_steps for r in live)
         g.priority = max(r.req.priority for r in live)
         g.deadline = min(r.deadline for r in live)
         g.fn, compile_s = self._executor(g.sig, g.plan, g.state)
@@ -567,18 +783,23 @@ class DiffusionServeEngine:
         return len(self._compiled)
 
     def tick(self, *, on_step=None, stream_decode: bool = False) -> list[Result]:
-        """One scheduler tick: admit pending requests, advance the selected
-        groups one solver step each, emit Results for rows that finished.
+        """One scheduler tick: admit pending requests (joining in-flight
+        groups at compaction boundaries, else forming fresh ones), advance
+        the selected groups one solver step each, emit Results for rows
+        that finished.
 
         All selected group steps are dispatched before any is blocked on, so
         on async backends the device overlaps them; each group's ``solve_s``
         is the elapsed time from its dispatch to its step being ready (what a
-        client of that group observes). A row's Result is emitted from the
-        tick its OWN step count completes -- in a ragged group that is before
-        the group drains -- with ``latency_s`` = the group's solve time so
-        far and the row's true ``nfe``. Groups with only finished rows are
-        retired; with ``compaction`` on, partially-finished groups shrink to
-        their survivors."""
+        client of that group observes). Every group steps with a per-row
+        ``k`` vector (row ``i`` at ``g.k - k0``), so joiners and veterans
+        advance on their own grids in one executor call. A row's Result is
+        emitted from the tick its OWN step count completes -- in a ragged
+        group that is before the group drains -- with ``latency_s`` = the
+        group's solve time since the row's admission and the row's true
+        ``nfe``. Groups with only finished rows are retired; groups left
+        with retired rows rebuild (join or compact) at the next tick's
+        admission boundary, before they step again."""
         self._admit()
         self.ticks += 1
         finished: list[Result] = []
@@ -590,18 +811,21 @@ class DiffusionServeEngine:
             g.skipped = 0
             # structural filler rows (pad) are free capacity in a
             # data-parallel step, not waste; only retired REQUEST rows that
-            # keep stepping count
+            # keep stepping count. With compaction on, the admission-time
+            # boundary pass has already joined over / compacted away /
+            # pad-marked every retired row, so this stays zero.
             self.wasted_row_steps += sum(
                 r.done and not r.pad for r in g.rows)
+            k_vec = jnp.asarray([g.k - r.k0 for r in g.rows], jnp.int32)
             t0 = time.perf_counter()
-            g.state = g.fn(self._params_exec, g.plan, jnp.int32(g.k), g.state)
+            g.state = g.fn(self._params_exec, g.plan, k_vec, g.state)
             dispatched.append((g, t0))
         for g, t0 in dispatched:
             jax.block_until_ready(g.state.x)
             g.solve_s += time.perf_counter() - t0
             g.k += 1
             newly = [i for i, r in enumerate(g.rows)
-                     if not r.done and r.n_steps == g.k]
+                     if not r.done and r.k0 + r.n_steps == g.k]
             # decode against the as-placed params (replicated under a mesh):
             # a data-sharded iterate composes with them eagerly, so the
             # sharded and unsharded paths share one decode expression
@@ -615,7 +839,9 @@ class DiffusionServeEngine:
                     uids=g.uids, k=g.k, n_steps=g.n_steps,
                     tokens=stream_toks[real] if stream_toks is not None
                     else None,
-                    row_steps=tuple(g.rows[i].n_steps for i in real)))
+                    row_steps=tuple(g.rows[i].n_steps for i in real),
+                    row_k=tuple(g.k - g.rows[i].k0 for i in real),
+                    row_seq_lens=tuple(g.rows[i].req.seq_len for i in real)))
             if newly:
                 # decode ONLY the finished rows unless a full partial decode
                 # already exists (ragged groups would otherwise pay one
@@ -625,26 +851,16 @@ class DiffusionServeEngine:
                         self._params_exec, self.cfg,
                         g.state.x[jnp.asarray(newly)]))
                 for j, i in enumerate(newly):
-                    g.rows[i].done = True
-                    finished.append(Result(g.rows[i].req.uid, new_toks[j],
-                                           g.solve_s, nfe=g.rows[i].nfe,
-                                           compile_s=g.compile_s))
-            live = [i for i, r in enumerate(g.rows) if not r.done]
-            if not live:
+                    row = g.rows[i]
+                    row.done = True
+                    # bucketed admission: mask the solve's tail positions
+                    # back to the request's true seq_len
+                    finished.append(Result(
+                        row.req.uid, new_toks[j][:row.req.seq_len],
+                        g.solve_s - row.solve_s0, nfe=row.nfe,
+                        compile_s=g.compile_s, queue_wait_s=row.wait_s))
+            if not any(not r.done for r in g.rows):
                 self._active.remove(g)
-            elif self.compaction and len(live) < len(g.rows):
-                keep = self._compact_target(g, live)
-                if keep is not None:
-                    self._compact(g, keep)
-                else:
-                    # the group already sits at the smallest placeable
-                    # multiple of the data axis (mesh only: unsharded groups
-                    # always shrink): its retired rows are structurally
-                    # required filler -- same status as rows retained by a
-                    # compaction -- not waste
-                    for r in g.rows:
-                        if r.done:
-                            r.pad = True
         return finished
 
     def serve(self, requests: list[Request], *, on_step=None,

@@ -210,6 +210,17 @@ def plan_specs(plan, mesh: Mesh):
         plan)
 
 
+def step_index_specs(k, mesh: Mesh) -> P:
+    """Spec for the executor's step-index argument.
+
+    A per-row ``(R,)`` step vector (post-join serving groups: each row runs
+    at its own step count) shards over the data-like axes alongside the
+    request-axis leaves it indexes, so the per-row coefficient gather stays
+    local to each shard; a group-uniform scalar ``k`` replicates.
+    """
+    return _leading_axis_spec(k, mesh, 0) if getattr(k, "ndim", 0) else P()
+
+
 def state_specs(state, mesh: Mesh):
     """PartitionSpec tree for a stacked :class:`SamplerState`.
 

@@ -1,0 +1,252 @@
+"""Property-based plan-algebra suite: randomized solver mixes, NFE grids and
+row subsets drive the invariants the serving layer is built on --
+``stack_plans`` / ``pad_plan`` / ``take_rows`` / ``inert_row`` /
+``join_rows`` keep kept-row prefixes bitwise-exact, join and take round-trip,
+and signatures stay stable under every splice.
+
+Runs under real ``hypothesis`` when installed (randomized seeds with
+shrinking); on a stock environment it degrades to a fixed battery of seeded
+exemplar cases executed with the SAME scenario generator -- not the conftest
+stub's skip -- so the properties are always exercised.
+"""
+import hypothesis
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (VPSDE, get_timesteps, inert_row, init_state,
+                        join_rows, join_state_rows, make_plan, pad_plan,
+                        stack_plans, take_rows, take_state_rows)
+
+SDE = VPSDE()
+
+# the conftest stub (installed when hypothesis is absent) has no __version__;
+# the real package always does
+_REAL_HYP = hasattr(hypothesis, "__version__")
+_EXEMPLAR_SEEDS = [0, 1, 2, 3, 4, 5, 6, 7, 11, 13, 17, 23]
+
+
+def fuzz_property(fn):
+    """Run ``fn(seed)`` as a hypothesis property over random seeds when the
+    real package is installed, else parametrized over exemplar seeds."""
+    if _REAL_HYP:
+        from hypothesis import given, settings, strategies as st
+        return settings(max_examples=25, deadline=None)(
+            given(seed=st.integers(min_value=0, max_value=2**31 - 1))(fn))
+    return pytest.mark.parametrize("seed", _EXEMPLAR_SEEDS)(fn)
+
+
+# one entry per signature family: names that stack at a shared grid
+_FAMILIES = [
+    ("ab_w1", ["ddim", "euler", "naive_ei"], 2),
+    ("ab_w3", ["tab2", "ipndm2"], 2),
+    ("ab_w4", ["tab3", "ipndm3"], 3),
+    ("stoch", ["em", "ddim_eta"], 2),
+    ("rk2", ["rho_heun", "rho_midpoint", "dpm2"], 2),
+    ("rk4", ["rho_rk4"], 2),
+    ("pndm", ["pndm"], 5),
+]
+
+
+def _mk(name, n_steps):
+    kw = {"eta": 1.0} if name == "ddim_eta" else {}
+    return make_plan(name, SDE, get_timesteps(SDE, n_steps, "quadratic"), **kw)
+
+
+def _scenario(seed):
+    """Seed -> (rng, family names, min grid, members): 2-4 random
+    same-family plans with random per-member grid sizes."""
+    rng = np.random.RandomState(seed % (2**31))
+    _, names, lo = _FAMILIES[rng.randint(len(_FAMILIES))]
+    k = rng.randint(2, 5)
+    members = [_mk(names[rng.randint(len(names))], int(rng.randint(lo, lo + 6)))
+               for _ in range(k)]
+    return rng, names, lo, members
+
+
+def _leaves_equal(a, b):
+    """Bitwise equality of every dynamic leaf. Deliberately leaf-wise, not
+    jax.tree.map: static ``nfe`` is a group-lifetime max that take_rows/
+    join_rows preserve while a fresh re-stack of the same rows recomputes
+    it, so the treedefs may legitimately differ."""
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+@fuzz_property
+def test_stack_rows_are_members_bitwise(seed):
+    """Row i of a stack IS member i: every coefficient leaf and ts row is
+    the member's array bit-for-bit, nfe is the member max, and stacking is
+    signature-stable across member permutations."""
+    rng, names, lo, members = _scenario(seed)
+    n_max = max(p.n_steps for p in members)
+    padded = [pad_plan(p, n_max) for p in members]
+    stacked = stack_plans(padded)
+    assert stacked.batch == len(members)
+    assert stacked.nfe == max(p.nfe for p in members)
+    for i, p in enumerate(padded):
+        for name, v in p.coeffs.items():
+            np.testing.assert_array_equal(np.asarray(stacked.coeffs[name][i]),
+                                          np.asarray(v))
+        np.testing.assert_array_equal(np.asarray(stacked.ts[i]),
+                                      np.asarray(p.ts))
+    perm = rng.permutation(len(padded))
+    assert stack_plans([padded[i] for i in perm]).signature == stacked.signature
+
+
+@fuzz_property
+def test_pad_plan_prefix_bitwise_and_family(seed):
+    """Padding preserves the original steps bit-for-bit, keeps every padded
+    leaf finite, never changes family/nfe, and makes same-family plans
+    signature-equal (the stackability contract)."""
+    rng, names, lo, members = _scenario(seed)
+    p = members[0]
+    pad = int(rng.randint(1, 5))
+    padded = pad_plan(p, p.n_steps + pad)
+    assert padded.nfe == p.nfe and padded.family == p.family
+    assert padded.n_steps == p.n_steps + pad
+    for name, v in p.coeffs.items():
+        got = np.asarray(padded.coeffs[name])
+        assert np.all(np.isfinite(got))
+        lead = v.shape[0] if np.ndim(v) else None
+        if lead in (p.n_steps, p.n_steps + 1):   # per-step / per-knot leaf
+            np.testing.assert_array_equal(got[:lead], np.asarray(v))
+        else:                                    # step-count-independent
+            np.testing.assert_array_equal(got, np.asarray(v))
+    np.testing.assert_array_equal(np.asarray(padded.ts[:p.n_steps + 1]),
+                                  np.asarray(p.ts))
+    # two same-family plans padded to one grid have EQUAL signatures
+    q = members[-1]
+    n = max(p.n_steps, q.n_steps) + 1
+    assert pad_plan(p, n).signature == pad_plan(q, n).signature
+
+
+@fuzz_property
+def test_take_rows_gathers_bitwise_and_composes(seed):
+    """take_rows is a pure row gather: kept rows are bitwise-unmoved, in the
+    requested order, and gathers compose (take of a take == take of the
+    composed index)."""
+    rng, names, lo, members = _scenario(seed)
+    n_max = max(p.n_steps for p in members)
+    padded = [pad_plan(p, n_max) for p in members]
+    stacked = stack_plans(padded)
+    rows = [int(i) for i in
+            rng.permutation(len(members))[:rng.randint(1, len(members) + 1)]]
+    taken = take_rows(stacked, rows)
+    assert taken.signature == stack_plans([padded[i] for i in rows]).signature
+    _leaves_equal(taken, stack_plans([padded[i] for i in rows]))
+    if len(rows) > 1:
+        sub = [int(i) for i in rng.permutation(len(rows))[:1]]
+        _leaves_equal(take_rows(taken, sub),
+                      take_rows(stacked, [rows[i] for i in sub]))
+
+
+@fuzz_property
+def test_join_rows_prefix_exact_and_roundtrips(seed):
+    """join_rows appends padded joiners without touching in-flight rows:
+    the leading rows of the joined stack are the original stack bitwise,
+    the appended rows are pad_plan(joiner) bitwise, the signature stays in
+    the same family at the grown batch, and take(join) round-trips to the
+    original stack exactly."""
+    rng, names, lo, members = _scenario(seed)
+    n_max = max(p.n_steps for p in members)
+    stacked = stack_plans([pad_plan(p, n_max) for p in members])
+    # joiners: same family, grids at or below the horizon
+    joiners = [_mk(names[rng.randint(len(names))], int(rng.randint(lo, n_max + 1)))
+               for _ in range(rng.randint(1, 4))]
+    joined = join_rows(stacked, joiners)
+    R = stacked.batch
+    assert joined.batch == R + len(joiners)
+    _leaves_equal(take_rows(joined, list(range(R))), stacked)   # round-trip
+    for j, p in enumerate(joiners):
+        row = take_rows(joined, [R + j])
+        _leaves_equal(row, stack_plans([pad_plan(p, n_max)]))
+    # executor-cache stability: the joined signature equals a natively
+    # stacked batch of the same size
+    native = stack_plans([pad_plan(p, n_max)
+                          for p in members + joiners])
+    assert joined.signature == native.signature
+
+
+@fuzz_property
+def test_join_state_rows_prefix_exact(seed):
+    """State splicing keeps veteran leaves bitwise-unmoved in their slots
+    and appends the joiners' fresh state; take_state_rows round-trips."""
+    rng, names, lo, members = _scenario(seed)
+    n_max = max(p.n_steps for p in members)
+    stacked = stack_plans([pad_plan(p, n_max) for p in members])
+    R, d = stacked.batch, 4
+    xT = jnp.asarray(rng.randn(R, d))
+    keys = jnp.stack([jax.random.PRNGKey(int(s))
+                      for s in rng.randint(0, 1000, R)])
+    st = init_state(stacked, xT, keys)
+    x_new = jnp.asarray(rng.randn(2, d))
+    k_new = jnp.stack([jax.random.PRNGKey(int(s))
+                       for s in rng.randint(0, 1000, 2)])
+    st_new = init_state(stack_plans([pad_plan(members[0], n_max)] * 2),
+                        x_new, k_new)
+    joined = join_state_rows(st, st_new)
+    np.testing.assert_array_equal(np.asarray(joined.x[:R]), np.asarray(st.x))
+    np.testing.assert_array_equal(np.asarray(joined.hist[:, :R]),
+                                  np.asarray(st.hist))
+    np.testing.assert_array_equal(np.asarray(joined.key[:R]),
+                                  np.asarray(st.key))
+    np.testing.assert_array_equal(np.asarray(joined.x[R:]),
+                                  np.asarray(st_new.x))
+    back = take_state_rows(joined, list(range(R)))
+    np.testing.assert_array_equal(np.asarray(back.x), np.asarray(st.x))
+    np.testing.assert_array_equal(np.asarray(back.key), np.asarray(st.key))
+
+
+@fuzz_property
+def test_inert_row_is_signature_stable_filler(seed):
+    """inert_row keeps the member signature (stackable as filler), zeroes
+    every weight-like per-step leaf, and reports zero NFE."""
+    _, _, _, members = _scenario(seed)
+    p = members[0]
+    filler = inert_row(p)
+    assert filler.signature == p.signature and filler.nfe == 0
+    from repro.core.plan import _PER_STEP_COEFFS, _TIME_LIKE
+    for name, v in filler.coeffs.items():
+        if name in _PER_STEP_COEFFS and name not in _TIME_LIKE:
+            assert not np.any(np.asarray(v))
+        else:
+            np.testing.assert_array_equal(np.asarray(v),
+                                          np.asarray(p.coeffs[name]))
+    assert stack_plans([p, filler]).batch == 2
+
+
+# ------------------------------------------------- explicit error contracts
+def test_join_rows_rejects_incompatible_joiners():
+    p6 = make_plan("ddim", SDE, get_timesteps(SDE, 6, "quadratic"))
+    p8 = make_plan("ddim", SDE, get_timesteps(SDE, 8, "quadratic"))
+    stacked = stack_plans([p6, p6])
+    with pytest.raises(ValueError, match="stacked"):
+        join_rows(p6, [p6])                       # unstacked base
+    with pytest.raises(ValueError, match="unstacked"):
+        join_rows(stacked, [stacked])             # stacked joiner
+    with pytest.raises(ValueError, match="horizon"):
+        join_rows(stacked, [p8])                  # grid exceeds horizon
+    with pytest.raises(ValueError, match="family"):
+        join_rows(stacked, [make_plan("tab2", SDE,
+                                      get_timesteps(SDE, 6, "quadratic"))])
+    with pytest.raises(ValueError, match="at least one"):
+        join_rows(stacked, [])
+
+
+def test_join_state_rows_rejects_unstacked_and_mismatched():
+    from repro.core import SamplerState
+    p = make_plan("tab2", SDE, get_timesteps(SDE, 6, "quadratic"))
+    stacked = stack_plans([p, p])
+    keys = jnp.stack([jax.random.PRNGKey(s) for s in (1, 2)])
+    st = init_state(stacked, jnp.zeros((2, 4)), keys)
+    solo = init_state(p, jnp.zeros(4))
+    with pytest.raises(ValueError, match="stacked"):
+        join_state_rows(st, solo)
+    other = init_state(stack_plans([make_plan("ddim", SDE, get_timesteps(
+        SDE, 6, "quadratic"))]), jnp.zeros((1, 4)), keys[:1])
+    with pytest.raises(ValueError, match="history"):
+        join_state_rows(st, other)

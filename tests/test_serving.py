@@ -302,10 +302,13 @@ def test_deadline_request_preempts_older_work(diff_setup):
 def test_compaction_recomputes_group_urgency(diff_setup):
     """When the urgent row of a ragged group retires, the surviving
     best-effort rows must NOT inherit its priority/deadline: a mid-priority
-    newcomer preempts the compacted leftovers (no priority inversion)."""
+    newcomer preempts the compacted leftovers (no priority inversion).
+    join=False isolates the compaction path -- with joins on, the newcomer
+    would be spliced into the leftover group instead (covered by the join
+    tests below)."""
     params, cfg = diff_setup
     eng = DiffusionServeEngine(params, cfg, steps_per_tick=1,
-                               aging_ticks=1000)
+                               aging_ticks=1000, join=False)
     eng.submit(Request(uid=0, seq_len=16, nfe=3, solver="ddim", seed=0,
                        priority=2, deadline_s=0.05))
     eng.submit(Request(uid=1, seq_len=16, nfe=9, solver="ddim", seed=1))
@@ -354,6 +357,174 @@ def test_starvation_aging_boosts_skipped_group(diff_setup):
     assert 0 in order[b_span[0]:b_span[1]], order
     # ... while B (higher priority) still finished first
     assert [r.uid for r in done] == [1, 0]
+
+
+# ----------------------------------------- continuous admission (joins)
+def test_join_at_compaction_boundary_bitwise_vs_solo(diff_setup):
+    """A request pending when a group's row retires is spliced INTO the
+    surviving group (continuous admission) instead of forming a fresh one,
+    and every sample -- veteran and joiner -- is bitwise-identical to its
+    solo serve. The joiner's steps count from its own admission tick: its
+    nfe is its own plan's, and its latency excludes the group's pre-join
+    solve time."""
+    params, cfg = diff_setup
+    eng = DiffusionServeEngine(params, cfg)
+    eng.submit(Request(uid=0, seq_len=16, nfe=3, solver="ddim", seed=1))
+    eng.submit(Request(uid=1, seq_len=16, nfe=9, solver="ddim", seed=2))
+    out = []
+    for _ in range(3):
+        out += eng.tick()                    # uid=0 retires at tick 3
+    eng.submit(Request(uid=2, seq_len=16, nfe=4, solver="euler", seed=3))
+    ticks_before = eng.ticks
+    while eng.busy:
+        out += eng.tick()
+    got = {r.uid: r for r in out}
+    assert eng.joined_requests == 1          # uid=2 joined, no fresh group
+    assert eng.wasted_row_steps == 0
+    # joiner accounting runs on ITS OWN steps, not the group's age
+    assert got[2].nfe == 4
+    assert got[2].latency_s < got[1].latency_s   # 4 post-join steps < 9
+    assert got[2].queue_wait_s >= 0.0
+    # the joiner finished 4 ticks after admission (k0=3 -> done at g.k=7)
+    assert eng.ticks - ticks_before == 6     # group drains at uid1's k=9
+    solo = DiffusionServeEngine(params, cfg)
+    for q in [Request(uid=0, seq_len=16, nfe=3, solver="ddim", seed=1),
+              Request(uid=1, seq_len=16, nfe=9, solver="ddim", seed=2),
+              Request(uid=2, seq_len=16, nfe=4, solver="euler", seed=3)]:
+        np.testing.assert_array_equal(solo.serve([q])[0].tokens,
+                                      got[q.uid].tokens)
+
+
+def test_join_keeps_executor_set_fixed(diff_setup):
+    """The never-drain/never-recompile contract: replaying the same
+    join-heavy workload on a warm engine adds no executors and charges no
+    compile time."""
+    params, cfg = diff_setup
+    eng = DiffusionServeEngine(params, cfg)
+
+    def run():
+        eng.submit(Request(uid=0, seq_len=16, nfe=3, solver="ddim", seed=1))
+        eng.submit(Request(uid=1, seq_len=16, nfe=8, solver="ddim", seed=2))
+        out = []
+        for _ in range(3):
+            out += eng.tick()
+        eng.submit(Request(uid=2, seq_len=16, nfe=5, solver="ddim", seed=3))
+        while eng.busy:
+            out += eng.tick()
+        return out
+
+    run()
+    n = eng.num_executors
+    warm = run()
+    assert eng.num_executors == n
+    assert all(r.compile_s == 0.0 for r in warm)
+
+
+def test_join_respects_max_group(diff_setup):
+    """Joins never grow a group past max_group: surplus candidates form a
+    fresh group under the same urgency order."""
+    params, cfg = diff_setup
+    eng = DiffusionServeEngine(params, cfg, max_group=2)
+    eng.submit(Request(uid=0, seq_len=16, nfe=3, solver="ddim", seed=1))
+    eng.submit(Request(uid=1, seq_len=16, nfe=6, solver="ddim", seed=2))
+    out = []
+    for _ in range(3):
+        out += eng.tick()                    # uid=0 retired: one free slot
+    eng.submit(Request(uid=2, seq_len=16, nfe=4, solver="ddim", seed=3))
+    eng.submit(Request(uid=3, seq_len=16, nfe=4, solver="ddim", seed=4))
+    while eng.busy:
+        out += eng.tick()
+    assert eng.joined_requests == 1          # one slot -> one joiner
+    assert len(out) == 4
+    solo = DiffusionServeEngine(params, cfg)
+    for q in [Request(uid=2, seq_len=16, nfe=4, solver="ddim", seed=3),
+              Request(uid=3, seq_len=16, nfe=4, solver="ddim", seed=4)]:
+        np.testing.assert_array_equal(
+            solo.serve([q])[0].tokens,
+            {r.uid: r for r in out}[q.uid].tokens)
+
+
+def test_joiner_longer_than_horizon_forms_fresh_group(diff_setup):
+    """A pending request whose grid exceeds the group's horizon cannot join
+    (extending the grid would change the signature); it forms a fresh group
+    and still solves correctly."""
+    params, cfg = diff_setup
+    eng = DiffusionServeEngine(params, cfg)
+    eng.submit(Request(uid=0, seq_len=16, nfe=3, solver="ddim", seed=1))
+    eng.submit(Request(uid=1, seq_len=16, nfe=6, solver="ddim", seed=2))
+    out = []
+    for _ in range(3):
+        out += eng.tick()
+    eng.submit(Request(uid=2, seq_len=16, nfe=9, solver="ddim", seed=3))
+    while eng.busy:
+        out += eng.tick()
+    assert eng.joined_requests == 0
+    solo = DiffusionServeEngine(params, cfg)
+    np.testing.assert_array_equal(
+        solo.serve([Request(uid=2, seq_len=16, nfe=9, solver="ddim",
+                            seed=3)])[0].tokens,
+        {r.uid: r for r in out}[2].tokens)
+
+
+def test_joined_request_streams_own_progress(diff_setup):
+    """StepEvent.row_k counts a joiner's steps from ITS admission tick, so
+    per-request progress streams correctly for rows joined mid-flight."""
+    params, cfg = diff_setup
+    eng = DiffusionServeEngine(params, cfg)
+    events = []
+    eng.submit(Request(uid=0, seq_len=16, nfe=3, solver="ddim", seed=1))
+    eng.submit(Request(uid=1, seq_len=16, nfe=7, solver="ddim", seed=2))
+    for _ in range(3):
+        eng.tick(on_step=events.append)
+    eng.submit(Request(uid=2, seq_len=16, nfe=4, solver="ddim", seed=3))
+    while eng.busy:
+        eng.tick(on_step=events.append)
+    assert eng.joined_requests == 1
+    prog = [dict(zip(e.uids, e.row_k)) for e in events]
+    assert [p.get(2) for p in prog] == [None, None, None, 1, 2, 3, 4]
+    assert [p[1] for p in prog] == [1, 2, 3, 4, 5, 6, 7]   # veteran unmoved
+
+
+def test_seq_len_buckets_share_executor(diff_setup):
+    """seq_len_buckets rounds requests up to bucket edges: seq 12 and 16
+    solve at one (signature, batch, 16) executor, results are masked back
+    to each request's true length, and samples stay reproducible."""
+    params, cfg = diff_setup
+    eng = DiffusionServeEngine(params, cfg, seq_len_buckets=(16,))
+    reqs = [Request(uid=0, seq_len=12, nfe=4, solver="ddim", seed=1),
+            Request(uid=1, seq_len=16, nfe=4, solver="ddim", seed=2)]
+    res = {r.uid: r for r in eng.serve(list(reqs))}
+    assert res[0].tokens.shape == (12,)
+    assert res[1].tokens.shape == (16,)
+    # ONE executor: both lengths bucket to 16 and stack into one group
+    assert {(k[1], k[2]) for k in eng._compiled} == {(2, 16)}
+    # reproducible; solo reference shares the bucket config
+    solo = DiffusionServeEngine(params, cfg, seq_len_buckets=(16,))
+    for q in reqs:
+        np.testing.assert_array_equal(solo.serve([q])[0].tokens,
+                                      res[q.uid].tokens)
+    # beyond the last edge: exact length, no bucketing
+    big = eng.serve([Request(uid=2, seq_len=24, nfe=4, solver="ddim",
+                             seed=3)])[0]
+    assert big.tokens.shape == (24,)
+    with pytest.raises(ValueError, match="seq_len_buckets"):
+        DiffusionServeEngine(params, cfg, seq_len_buckets=(16, 8))
+
+
+def test_seq_len_bucket_stream_decode_masks_tail(diff_setup):
+    """stream_decode under bucketing: group events carry bucket-length rows
+    plus row_seq_lens so consumers (the driver) can mask the tail; final
+    Results are already masked."""
+    params, cfg = diff_setup
+    eng = DiffusionServeEngine(params, cfg, seq_len_buckets=(16,))
+    events = []
+    res = eng.serve([Request(uid=0, seq_len=10, nfe=3, solver="ddim",
+                             seed=1)],
+                    on_step=events.append, stream_decode=True)
+    assert all(e.tokens.shape == (1, 16) for e in events)
+    assert all(e.row_seq_lens == (10,) for e in events)
+    assert res[0].tokens.shape == (10,)
+    np.testing.assert_array_equal(events[-1].tokens[0][:10], res[0].tokens)
 
 
 def test_admission_splits_oversized_buckets(diff_setup):

@@ -270,6 +270,47 @@ print("ENGINE_OK")
 """
 
 
+_CHILD_JOIN = _CHILD_COMMON + """
+from repro.configs.base import get_config
+from repro.models import transformer as T
+from repro.serving.engine import DiffusionServeEngine, Request
+from repro.launch.mesh import make_request_mesh
+
+cfg = get_config("gemma_2b").reduced().with_(objective="diffusion")
+params = T.init_params(cfg, jax.random.PRNGKey(0))
+# an 8-row ragged group on the 8-way axis: 4 rows retire after 3 steps,
+# leaving 4 slots; 4 joiners then refill them at the SAME batch size --
+# the never-drain, never-recompile steady state
+first = [Request(uid=i, seq_len=16, nfe=[3, 8][i % 2], solver="ddim", seed=i)
+         for i in range(8)]
+late = [Request(uid=100 + i, seq_len=16, nfe=4, solver="euler", seed=50 + i)
+        for i in range(4)]
+eng = DiffusionServeEngine(params, cfg, max_group=8, mesh=make_request_mesh())
+out = []
+for r in first:
+    eng.submit(r)
+for _ in range(3):
+    out += eng.tick()              # nfe=3 rows retire at tick 3
+for r in late:
+    eng.submit(r)
+while eng.busy:
+    out += eng.tick()
+assert eng.joined_requests == 4, eng.joined_requests
+assert eng.wasted_row_steps == 0, eng.wasted_row_steps
+# retired rows became join slots in place: ONE executor bucket, batch 8
+assert {k[1] for k in eng._compiled} == {8}, sorted(eng._compiled)
+got = {r.uid: r.tokens for r in out}
+assert len(got) == 12
+solo = DiffusionServeEngine(params, cfg)   # single-device solo reference
+for r in first + late:
+    np.testing.assert_array_equal(
+        solo.serve([Request(uid=r.uid, seq_len=16, nfe=r.nfe,
+                            solver=r.solver, seed=r.seed)])[0].tokens,
+        got[r.uid])
+print("JOIN_OK")
+"""
+
+
 def _run_child(script: str, marker: str, timeout: int) -> None:
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
@@ -289,6 +330,16 @@ def test_8dev_sampler_bitwise_stochastic_stack():
     distinct seeds) sharded over the request axis is bitwise identical to the
     unsharded stack AND to each row's solo solve."""
     _run_child(_CHILD_SAMPLER, "SAMPLER_OK", timeout=600)
+
+
+@pytest.mark.slow  # compiles an 8-row sharded executor + solo references
+def test_8dev_engine_join_refills_group_at_fixed_batch():
+    """Forced 8-device host mesh: retired rows of an 8-row ragged group
+    become join slots -- late same-family requests are spliced in at the
+    SAME batch size (one executor bucket total, zero waste) and every
+    sample, veteran and joiner, is bitwise-identical to a single-device
+    solo serve."""
+    _run_child(_CHILD_JOIN, "JOIN_OK", timeout=900)
 
 
 @pytest.mark.slow  # compiles 16- and 8-row sharded+unsharded executors (~3min)
