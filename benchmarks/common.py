@@ -77,3 +77,22 @@ def emit(rows: list[dict], name: str):
     """Print rows and the required ``name,us_per_call,derived`` CSV line."""
     for r in rows:
         print(",".join(f"{k}={v}" for k, v in r.items()))
+
+
+def write_bench(name: str, metrics: dict, out_path: str, *, quick: bool,
+                extra_meta: dict | None = None) -> dict:
+    """Write a ``BENCH_<name>.json`` perf-trajectory record.
+
+    ``metrics`` maps dotted metric names to :func:`repro.obs.bench.metric`
+    entries. The meta envelope stamps quick/full mode plus the backend and
+    jax version, so ``repro.obs.bench compare`` can warn when two records
+    are not commensurate. Returns the written record."""
+    from repro.obs import bench
+
+    meta = {"quick": bool(quick), "backend": jax.default_backend(),
+            "jax": jax.__version__}
+    if extra_meta:
+        meta.update(extra_meta)
+    rec = bench.record(name, metrics, meta)
+    bench.write(out_path, rec)
+    return rec

@@ -362,3 +362,83 @@ def run(quick: bool = False):
     rows += _continuous_admission_rows(params, cfg, quick)
     rows += _sharded_rows(quick)
     return rows
+
+
+# ------------------------------------------------- BENCH_serving.json record
+def bench_metrics(rows: list[dict]) -> dict:
+    """Convert run() rows into a named metric series for ``obs.bench``.
+
+    Scheduler metrics that are deterministic functions of the (seeded)
+    workload and the scheduling policy -- wasted row steps, tick counts,
+    join counts, tick-denominated queue waits, warm recompiles, executor
+    traces -- ratchet at tol 0: ANY drift is a scheduling regression (or an
+    intentional policy change, in which case the committed baseline is
+    updated in the same PR). Wall-clock timings ride along as
+    ``ratchet: false`` trajectory points; they flex with the host."""
+    from repro.obs.bench import metric
+
+    out = {}
+    for r in rows:
+        sol = r["solver"]
+        if sol == "ragged_priority":
+            pre = ("ragged_priority.compaction_on" if r["compaction"]
+                   else "ragged_priority.compaction_off")
+            out[f"{pre}.wasted_row_steps"] = metric(
+                r["wasted_row_steps"], unit="steps", ratchet=True, tol=0.0)
+            out[f"{pre}.scheduler_ticks"] = metric(
+                r["scheduler_ticks"], unit="ticks", ratchet=True, tol=0.0)
+            out[f"{pre}.p50_ms"] = metric(r["p50_ms"], unit="ms")
+            out[f"{pre}.p99_ms"] = metric(r["p99_ms"], unit="ms")
+        elif sol == "continuous_admission":
+            pre = ("continuous_admission.joins_on" if r["joins"]
+                   else "continuous_admission.joins_off")
+            out[f"{pre}.wasted_row_steps"] = metric(
+                r["wasted_row_steps"], unit="steps", ratchet=True, tol=0.0)
+            out[f"{pre}.joined_requests"] = metric(
+                r["joined_requests"], unit="requests", direction="higher",
+                ratchet=True, tol=0.0)
+            out[f"{pre}.mean_wait_ticks"] = metric(
+                r["mean_wait_ticks"], unit="ticks", ratchet=True, tol=0.0)
+            out[f"{pre}.warm_recompiles"] = metric(
+                r["warm_recompiles"], unit="compiles", ratchet=True, tol=0.0)
+            out[f"{pre}.mean_wait_ms"] = metric(r["mean_wait_ms"], unit="ms")
+        elif sol == "mixed":
+            out["mixed.executors"] = metric(
+                r["executors"], unit="traces", ratchet=True, tol=0.0)
+            out["mixed.us_per_request"] = metric(
+                r["us_per_request"], unit="us")
+        elif sol == "sharded_8dev":
+            out["sharded_8dev.warm_recompiles"] = metric(
+                r["warm_recompiles"], unit="compiles", ratchet=True, tol=0.0)
+            out["sharded_8dev.us_per_request"] = metric(
+                r["us_per_request"], unit="us")
+        else:  # per-(solver, NFE) throughput rows
+            pre = f"throughput.{sol}_nfe{r['NFE']}"
+            out[f"{pre}.us_per_request"] = metric(
+                r["us_per_request"], unit="us")
+            out[f"{pre}.seq_per_s"] = metric(
+                r["seq_per_s"], unit="seq/s", direction="higher")
+    return out
+
+
+def main(argv=None) -> int:
+    import argparse
+
+    from .common import write_bench
+
+    ap = argparse.ArgumentParser(prog="benchmarks.deis_serving")
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--out", default="BENCH_serving.json",
+                    help="where to write the bench record (default "
+                         "BENCH_serving.json in the cwd)")
+    args = ap.parse_args(argv)
+    rows = run(quick=args.quick)
+    for r in rows:
+        print(",".join(f"{k}={v}" for k, v in r.items()))
+    write_bench("serving", bench_metrics(rows), args.out, quick=args.quick)
+    print(f"wrote {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

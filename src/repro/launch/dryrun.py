@@ -301,7 +301,7 @@ def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool, mesh=None,
 
     mesh = mesh if mesh is not None else make_production_mesh(multi_pod=multi_pod)
     n_dev = int(np.prod(list(mesh.shape.values())))
-    t0 = time.time()
+    t0 = time.perf_counter()
     if fsdp is None:  # resolve from the FULL model so the depth-reduced
         # extrapolation compiles use the same sharding policy
         full_shape = jax.eval_shape(lambda k: T.init_params(cfg, k),
@@ -319,7 +319,7 @@ def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool, mesh=None,
     with jax.set_mesh(mesh):
         lowered = jfn.lower(*args)
         compiled = lowered.compile()
-    compile_s = time.time() - t0
+    compile_s = time.perf_counter() - t0
 
     try:
         mem = compiled.memory_analysis()
@@ -361,7 +361,7 @@ def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool, mesh=None,
         "arch": arch, "shape": shape_name, "status": "ok",
         "mesh": ("pod2x16x16" if multi_pod else "16x16"), "devices": n_dev,
         "objective": objective, "n_params": n_params,
-        "compile_s": round(time.time() - t0, 1),
+        "compile_s": round(time.perf_counter() - t0, 1),
         "full_compile_s": round(compile_s, 1),
         "flops_per_device": flops_dev, "bytes_per_device": bytes_dev,
         "collectives": dict(costs["coll_by_op"], total=costs["collective"]),

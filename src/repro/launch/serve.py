@@ -30,12 +30,15 @@ import argparse
 import asyncio
 import itertools
 import json
+import threading
 
 import jax
 import numpy as np
 
 from ..configs.base import get_config
 from ..models import transformer as T
+from ..obs.export import NdjsonExporter, to_prometheus
+from ..obs.trace import Tracer
 from ..serving.driver import QueueFull, ServeDriver
 from ..serving.engine import ARServeEngine, DiffusionServeEngine, Request
 from ..training import checkpoint as CKPT
@@ -43,6 +46,10 @@ from ..training import checkpoint as CKPT
 
 def make_http_server(driver: ServeDriver, port: int = 0):
     """HTTP-ish transport: a threaded stdlib server feeding the driver.
+
+    GET /metrics returns the full serving registry (engine + driver) in the
+    Prometheus text exposition format; GET /stats returns the driver's
+    summary counters as JSON.
 
     POST /v1/generate with a JSON body of Request fields (seq_len, nfe,
     solver, eta, seed, priority, deadline_s). Set ``"stream": true`` for an
@@ -75,6 +82,23 @@ def make_http_server(driver: ServeDriver, port: int = 0):
             self.send_header("Content-Length", str(len(body)))
             self.end_headers()
             self.wfile.write(body)
+
+        def do_GET(self):
+            # Scrape routes. Handler threads only READ the shared registry
+            # (counter/gauge reads are single attribute loads under the GIL;
+            # snapshot copies) -- the scheduler thread stays the one writer.
+            if self.path == "/metrics":
+                body = to_prometheus(driver.engine.metrics).encode()
+                self.send_response(200)
+                self.send_header("Content-Type",
+                                 "text/plain; version=0.0.4; charset=utf-8")
+                self.send_header("Content-Length", str(len(body)))
+                self.end_headers()
+                self.wfile.write(body)
+                return
+            if self.path == "/stats":
+                return self._json(200, driver.stats())
+            return self._json(404, {"error": f"no route {self.path}"})
 
         def do_POST(self):
             if self.path not in ("/generate", "/v1/generate"):
@@ -193,6 +217,20 @@ def main():
     ap.add_argument("--max-pending", type=int, default=None,
                     help="driver backpressure: bound on in-flight requests; "
                          "over it, submits are shed with QueueFull (HTTP 429)")
+    ap.add_argument("--enforce-deadlines", action="store_true",
+                    help="evict requests whose absolute deadline passes "
+                         "(pending or mid-flight); each evicted request "
+                         "fails with DeadlineExceeded on its own handle")
+    ap.add_argument("--metrics-ndjson", default=None, metavar="PATH",
+                    help="append NDJSON metric snapshots to PATH: every "
+                         "--metrics-interval seconds for the http transport, "
+                         "one final snapshot for sync/driver")
+    ap.add_argument("--metrics-interval", type=float, default=5.0,
+                    help="seconds between NDJSON snapshots (http transport)")
+    ap.add_argument("--trace-annotate", action="store_true",
+                    help="mirror engine spans into jax.profiler "
+                         "TraceAnnotations so they attach to device work in "
+                         "XLA/perfetto profiles")
     ap.add_argument("--data-parallel", action="store_true",
                     help="shard stacked solves over the request axis on a "
                          "('data',) mesh spanning every visible device "
@@ -223,19 +261,37 @@ def main():
                                    compaction=not args.no_compaction,
                                    join=not args.no_join,
                                    seq_len_buckets=buckets,
-                                   mesh=mesh)
+                                   mesh=mesh,
+                                   enforce_deadlines=args.enforce_deadlines)
+        if args.trace_annotate:
+            eng.tracer = Tracer(eng.metrics, annotate=True)
+        exporter = NdjsonExporter(args.metrics_ndjson,
+                                  extra={"arch": args.arch}) \
+            if args.metrics_ndjson else None
         if args.transport == "http":
             with ServeDriver(eng, max_pending=args.max_pending) as driver:
                 server = make_http_server(driver, args.port)
                 host, port = server.server_address
                 print(f"serving DEIS on http://{host}:{port}/v1/generate "
-                      "(POST JSON; Ctrl-C to stop)")
+                      "(POST JSON; GET /metrics for Prometheus text; "
+                      "Ctrl-C to stop)")
+                stop_snap = threading.Event()
+                if exporter is not None:
+                    def _snap_loop():
+                        while not stop_snap.wait(args.metrics_interval):
+                            exporter.write(eng.metrics)
+                    threading.Thread(target=_snap_loop, daemon=True,
+                                     name="metrics-ndjson").start()
                 try:
                     server.serve_forever()
                 except KeyboardInterrupt:
                     pass
                 finally:
+                    stop_snap.set()
                     server.shutdown()
+                    if exporter is not None:
+                        exporter.write(eng.metrics)   # final snapshot
+                        exporter.close()
             return
         if args.transport == "driver":
             with ServeDriver(eng, max_pending=args.max_pending) as driver:
@@ -243,6 +299,9 @@ def main():
                     _driver_demo(driver, args.requests, args.seq_len))
                 print(f"served {len(results)} requests; "
                       f"stats={driver.stats()}")
+            if exporter is not None:
+                exporter.write(eng.metrics)
+                exporter.close()
             return
         reqs = [Request(uid=i, seq_len=args.seq_len, nfe=args.nfe,
                         solver=args.solver, seed=i) for i in range(args.requests)]
@@ -253,6 +312,9 @@ def main():
             print(f"req {r.uid}: nfe={r.nfe} solve={r.latency_s:.2f}s "
                   f"compile={r.compile_s:.2f}s tokens[:10]={r.tokens[:10]}")
         print(f"served {len(results)} requests")
+        if exporter is not None:
+            exporter.write(eng.metrics)
+            exporter.close()
     else:
         eng = ARServeEngine(params, cfg, max_len=args.seq_len + args.max_new)
         rng = np.random.RandomState(0)

@@ -68,7 +68,7 @@ def main():
 
     src = MarkovTextSource(cfg.vocab_size, args.seed)
     rng = jax.random.PRNGKey(args.seed + 1)
-    t0 = time.time()
+    t0 = time.perf_counter()
     with mesh:
         for i in range(start, args.steps):
             batch = {k: jnp.asarray(v) for k, v in
@@ -78,7 +78,7 @@ def main():
             if i % max(1, args.steps // 10) == 0:
                 print(f"step {i:5d} loss={float(m['loss']):.4f} "
                       f"gnorm={float(m['grad_norm']):.3f} "
-                      f"({(time.time() - t0):.1f}s)")
+                      f"({(time.perf_counter() - t0):.1f}s)")
             if args.ckpt_dir and args.ckpt_every and \
                     (i + 1) % args.ckpt_every == 0:
                 CKPT.save(args.ckpt_dir, i + 1, (params, opt_state),

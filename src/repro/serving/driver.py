@@ -48,10 +48,12 @@ import asyncio
 import dataclasses
 import queue
 import threading
+import time
 from concurrent.futures import Future
 from typing import Iterator, Optional
 
-from .engine import DiffusionServeEngine, Request, Result, StepEvent
+from .engine import (DeadlineExceeded, DiffusionServeEngine, Request, Result,
+                     StepEvent)
 
 _CLOSE = object()   # stream sentinel: no more events
 
@@ -201,6 +203,17 @@ class ServeDriver:
         self._lock = threading.Lock()
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
+        # Driver metrics live in the ENGINE's registry so one /metrics scrape
+        # (or NDJSON snapshot) covers the whole serving stack.
+        self.metrics = engine.metrics
+        self._m_submitted = self.metrics.counter(
+            "driver_submitted_total", help="requests accepted by the driver")
+        self._m_shed = self.metrics.counter(
+            "driver_shed_total",
+            help="requests shed at submit time (QueueFull backpressure)")
+        self._h_loop = self.metrics.histogram(
+            "driver_loop_seconds",
+            help="scheduler-loop iteration latency (drain + tick + fanout)")
 
     # ------------------------------------------------------------ lifecycle
     def start(self) -> "ServeDriver":
@@ -248,12 +261,14 @@ class ServeDriver:
                                  "in flight")
             if self.max_pending is not None and \
                     len(self._streams) >= self.max_pending:
+                self._m_shed.inc()
                 stream._fail(QueueFull(
                     f"driver at max_pending={self.max_pending} in-flight "
                     f"requests; request uid {request.uid} shed -- back off "
                     "and resubmit"))
                 return stream
             self._streams[request.uid] = stream
+            self._m_submitted.inc()
         self._inbox.put((request, stream))
         # start AFTER the put: if a concurrent stop() let the scheduler
         # thread observe (stop set, inbox empty) and exit between our
@@ -268,13 +283,21 @@ class ServeDriver:
         return AsyncServeStream(self.submit(request))
 
     def stats(self) -> dict:
-        """Scheduler counters (safe snapshot; values may lag one tick)."""
+        """Scheduler counters (safe snapshot; values may lag one tick).
+
+        All counts come from the shared metrics registry (engine + driver
+        write into the same one); the historical keys are kept so existing
+        callers and the HTTP ``/stats`` route are unaffected."""
         eng = self.engine
         return {"ticks": eng.ticks, "executors": eng.num_executors,
                 "wasted_row_steps": eng.wasted_row_steps,
                 "joined_requests": eng.joined_requests,
                 "in_flight": len(self._streams),
-                "max_pending": self.max_pending}
+                "max_pending": self.max_pending,
+                "submitted": int(self._m_submitted.value),
+                "shed": int(self._m_shed.value),
+                "completed": int(eng._m_completed.value),
+                "deadline_evicted": int(eng._m_evicted.value)}
 
     # ------------------------------------------------------------ scheduler
     def _drain_inbox(self, block: bool) -> None:
@@ -343,6 +366,7 @@ class ServeDriver:
             busy = self.engine.busy
             self._drain_inbox(block=not busy)
             if self.engine.busy:
+                t0 = time.perf_counter()
                 try:
                     results = self.engine.tick(
                         on_step=self._fanout,
@@ -353,7 +377,21 @@ class ServeDriver:
                 for res in results:
                     with self._lock:
                         stream = self._streams.pop(res.uid, None)
-                    if stream is not None:
+                    if stream is None:
+                        continue
+                    if res.deadline_exceeded:
+                        # Deadline eviction is a per-request outcome, never a
+                        # driver crash: the engine recycled the row and this
+                        # request's own future carries the error (with the
+                        # partial Result attached for latency accounting).
+                        exc = DeadlineExceeded(
+                            f"request uid {res.uid} evicted: absolute "
+                            f"deadline passed after {res.latency_s:.3f}s of "
+                            "solve time")
+                        exc.result = res
+                        stream._fail(exc)
+                    else:
                         stream._finish(res)
+                self._h_loop.observe(time.perf_counter() - t0)
             elif self._stop.is_set() and self._inbox.empty():
                 return

@@ -106,7 +106,21 @@ from ..core.plan import (SolverPlan, inert_row, join_rows, pad_plan,
 from ..core.sde import SDE, VPSDE
 from ..diffusion import lm as DLM
 from ..models import transformer as T
+from ..obs.metrics import MetricsRegistry
+from ..obs.trace import Tracer
 from ..training.steps import make_decode_step, make_prefill_step
+
+
+class DeadlineExceeded(RuntimeError):
+    """A request's absolute deadline passed before its solve finished.
+
+    With ``enforce_deadlines=True`` the engine evicts the row at the next
+    boundary pass and emits a :class:`Result` flagged
+    ``deadline_exceeded=True`` (empty tokens, true queue wait, the solve
+    time spent so far). The driver converts that flag into THIS exception
+    on the request's own stream -- the scheduler thread never raises it, so
+    a deadline storm can degrade individual requests but never the service.
+    """
 
 
 @dataclasses.dataclass
@@ -149,6 +163,10 @@ class Result:
     compile_s: float = 0.0      # trace+compile charged to this group's
                                 # executor; 0.0 on a warm compile cache
     queue_wait_s: float = 0.0   # submit -> admission (join or fresh group)
+    deadline_exceeded: bool = False  # evicted by deadline enforcement:
+                                     # tokens is empty, nfe is 0 (no sample
+                                     # was produced), latency_s is the solve
+                                     # time burned before eviction
 
 
 @dataclasses.dataclass
@@ -319,7 +337,10 @@ class DiffusionServeEngine:
                  schedule: str = "quadratic", max_group: int = 8,
                  steps_per_tick: int | None = None, aging_ticks: int = 8,
                  compaction: bool = True, join: bool = True,
-                 seq_len_buckets=None, mesh=None):
+                 seq_len_buckets=None, mesh=None,
+                 enforce_deadlines: bool = False,
+                 metrics: MetricsRegistry | None = None,
+                 tracer: Tracer | None = None):
         """``steps_per_tick``: groups advanced per tick (None = all active,
         the PR-2 behavior; an int enables true EDF selection).
         ``aging_ticks``: skipped ticks per +1 effective-priority boost
@@ -348,7 +369,26 @@ class DiffusionServeEngine:
         in/out shardings, and admission rounds group sizes up to a multiple
         of the data-axis size with inert filler rows so groups always place
         evenly. Sharding changes WHERE rows compute, never what: samples
-        stay bitwise identical to the single-device path."""
+        stay bitwise identical to the single-device path.
+
+        ``enforce_deadlines``: deadlines stop being advisory. At every
+        boundary pass, pending requests AND mid-flight rows whose absolute
+        deadline (``submit time + deadline_s``) has passed are evicted: a
+        :class:`Result` flagged ``deadline_exceeded=True`` (empty tokens)
+        is emitted on the request's own stream, the freed row is recycled
+        through the existing join/compaction path, and the eviction is
+        counted in ``serve_deadline_evicted_total``. Off by default --
+        deadlines then only order the queue (the pre-enforcement behavior),
+        so latency-budget hints can never change what a request returns.
+
+        ``metrics``: a :class:`~repro.obs.metrics.MetricsRegistry` to
+        register the engine's counters/gauges/histograms in (share one per
+        process to aggregate engines); ``None`` creates a private registry
+        at ``engine.metrics``. ``tracer``: a
+        :class:`~repro.obs.trace.Tracer` for host-side span timing of
+        ticks/steps/compiles/boundary work; ``None`` builds one over the
+        same registry. Instrumentation is host-side only -- nothing here
+        syncs the device or touches the jitted step."""
         assert cfg.objective == "diffusion"
         self.params, self.cfg = params, cfg
         self.sde = sde or VPSDE()
@@ -407,10 +447,88 @@ class DiffusionServeEngine:
         self._pending: deque = deque()   # deque[_Pending]
         self._active: list[_Group] = []
         self._arrivals = 0          # admission sequence counter
-        self.ticks = 0              # scheduler ticks executed (metric)
-        self.wasted_row_steps = 0   # steps burned on already-finished rows
-        self.joined_requests = 0    # requests admitted by joining an
-                                    # in-flight group (metric)
+        self.enforce_deadlines = enforce_deadlines
+        self._evicted_results: list[Result] = []
+
+        # ---- observability: every scheduler metric lives in the registry;
+        # the legacy int counters (ticks/wasted_row_steps/joined_requests)
+        # are back-compat properties over it. Metric objects are resolved
+        # ONCE here -- the tick loop touches attributes, never the registry.
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self.tracer = tracer if tracer is not None else Tracer(self.metrics)
+        reg = self.metrics
+        self._m_ticks = reg.counter(
+            "serve_ticks_total", "scheduler ticks executed")
+        self._m_wasted = reg.counter(
+            "serve_wasted_row_steps_total",
+            "steps burned on already-finished request rows")
+        self._m_joined = reg.counter(
+            "serve_joined_requests_total",
+            "requests admitted by joining an in-flight group")
+        self._m_submitted = reg.counter(
+            "serve_submitted_total", "requests accepted by submit()")
+        self._m_completed = reg.counter(
+            "serve_completed_total", "requests finished with a sample")
+        self._m_evicted = reg.counter(
+            "serve_deadline_evicted_total",
+            "requests evicted by deadline enforcement")
+        self._m_compactions = reg.counter(
+            "serve_compactions_total", "mid-flight group compactions")
+        self._m_cache_hits = reg.counter(
+            "serve_compile_cache_hits_total",
+            "executor lookups served by the AOT compile cache")
+        self._m_cache_misses = reg.counter(
+            "serve_compile_cache_misses_total",
+            "executor lookups that traced+compiled a new executable")
+        self._m_compile_s = reg.counter(
+            "serve_compile_seconds_total",
+            "cumulative AOT trace+compile wall time")
+        self._g_queue = reg.gauge(
+            "serve_queue_depth", "requests pending admission")
+        self._g_groups = reg.gauge(
+            "serve_active_groups", "stacked groups in flight")
+        self._g_occupancy = reg.gauge(
+            "serve_group_occupancy",
+            "live request rows / stacked row slots across active groups")
+        self._h_queue_wait = reg.histogram(
+            "serve_queue_wait_seconds", "submit -> admission (join or fresh)")
+        self._h_solve = reg.histogram(
+            "serve_solve_seconds",
+            "per-request group solve time since its own admission")
+        self._h_step = reg.histogram(
+            "serve_step_seconds", "one group step, dispatch to ready")
+        self._h_tick = reg.histogram(
+            "serve_tick_seconds", "one full scheduler tick")
+
+    # ---- legacy int counters: back-compat views over the registry. The
+    # setters exist because benchmarks/tests re-zero them between the cold
+    # (compile) pass and the warm measured pass.
+    @property
+    def ticks(self) -> int:
+        """Scheduler ticks executed (metric)."""
+        return int(self._m_ticks.value)
+
+    @ticks.setter
+    def ticks(self, v: int) -> None:
+        self._m_ticks.reset(v)
+
+    @property
+    def wasted_row_steps(self) -> int:
+        """Steps burned on already-finished rows (metric)."""
+        return int(self._m_wasted.value)
+
+    @wasted_row_steps.setter
+    def wasted_row_steps(self, v: int) -> None:
+        self._m_wasted.reset(v)
+
+    @property
+    def joined_requests(self) -> int:
+        """Requests admitted by joining an in-flight group (metric)."""
+        return int(self._m_joined.value)
+
+    @joined_requests.setter
+    def joined_requests(self, v: int) -> None:
+        self._m_joined.reset(v)
 
     # ------------------------------------------------------------- plans
     def _plan(self, solver: str, nfe: int, eta: float | None) -> SolverPlan:
@@ -451,7 +569,9 @@ class DiffusionServeEngine:
         can never silently reuse a stale placement."""
         key_ = (sig, state.x.shape[0], state.x.shape[1], self._mesh_key)
         if key_ in self._compiled:
+            self._m_cache_hits.inc()
             return self._compiled[key_], 0.0
+        self._m_cache_misses.inc()
         cfg = self.cfg
 
         def run(params, plan_arg, k, st):
@@ -473,8 +593,11 @@ class DiffusionServeEngine:
             jitted = jax.jit(run, in_shardings=(param_sh, plan_sh, k_sh,
                                                 state_sh),
                              out_shardings=state_sh)
-        compiled = jitted.lower(self._params_exec, plan, k0, state).compile()
+        with self.tracer.span("compile"):
+            compiled = jitted.lower(self._params_exec, plan, k0,
+                                    state).compile()
         compile_s = time.perf_counter() - t0
+        self._m_compile_s.inc(compile_s)
         self._compiled[key_] = compiled
         return compiled, compile_s
 
@@ -508,6 +631,8 @@ class DiffusionServeEngine:
         # was the old LM-loop bug -- negative latencies across a clock step).
         self._pending.append(_Pending(request, plan, time.perf_counter(),
                                       self._bucket_len(request.seq_len)))
+        self._m_submitted.inc()
+        self._g_queue.set(len(self._pending))
 
     @staticmethod
     def _abs_deadline(req: Request, t_submit: float) -> float:
@@ -519,6 +644,43 @@ class DiffusionServeEngine:
         absolute deadline, admission order."""
         return (-(g.priority + g.skipped // self.aging_ticks),
                 g.deadline, g.arrival)
+
+    def _evict_expired(self, now: float) -> None:
+        """Deadline enforcement (``enforce_deadlines=True``): shed pending
+        requests and retire mid-flight rows whose absolute deadline has
+        passed. Evicted rows are marked ``done`` so the ordinary boundary
+        pass recycles their slots (join refill / ``take_rows`` compaction /
+        structural filler) exactly like normally-retired rows; a group left
+        with no live rows is dropped whole. Each eviction emits a
+        ``deadline_exceeded`` Result (drained by this tick) and increments
+        ``serve_deadline_evicted_total``. Never raises: a deadline storm
+        degrades the affected requests only."""
+        empty = np.zeros(0, np.int32)
+        still = deque()
+        while self._pending:
+            p = self._pending.popleft()
+            if self._abs_deadline(p.req, p.t_sub) < now:
+                self._m_evicted.inc()
+                self._h_queue_wait.observe(now - p.t_sub)
+                self._evicted_results.append(Result(
+                    p.req.uid, empty, 0.0, nfe=0,
+                    queue_wait_s=now - p.t_sub, deadline_exceeded=True))
+            else:
+                still.append(p)
+        self._pending = still
+        for g in list(self._active):
+            for r in g.rows:
+                if r.done or r.pad or not (r.deadline < now):
+                    continue
+                r.done = True
+                self._m_evicted.inc()
+                self._h_queue_wait.observe(r.wait_s)
+                self._evicted_results.append(Result(
+                    r.req.uid, empty, g.solve_s - r.solve_s0, nfe=0,
+                    compile_s=g.compile_s, queue_wait_s=r.wait_s,
+                    deadline_exceeded=True))
+            if not any(not r.done for r in g.rows):
+                self._active.remove(g)
 
     def _admit(self) -> None:
         """Admit everything pending (step-boundary admission).
@@ -546,12 +708,22 @@ class DiffusionServeEngine:
         quantized to ``(max_group // axis) * axis`` so rounding can never
         exceed the operator's ``max_group`` bound. Filler rows are born
         ``done`` -- they emit nothing, cost no extra wall-clock in a
-        data-parallel step, and are first in line to become join slots."""
+        data-parallel step, and are first in line to become join slots.
+
+        With ``enforce_deadlines`` an *eviction pass* runs first: pending
+        requests already past their absolute deadline are shed without ever
+        forming a group, and mid-flight rows past theirs are marked done
+        with a ``deadline_exceeded`` Result -- the ordinary boundary pass
+        below then recycles their slots through the SAME ``take_rows``
+        join/compaction path every retired row goes through."""
         now = time.perf_counter()
+        if self.enforce_deadlines:
+            self._evict_expired(now)
         buckets: dict = {}
         while self._pending:
             p = self._pending.popleft()
             buckets.setdefault((p.plan.family, p.s_len), []).append(p)
+        self._g_queue.set(0)
         for items in buckets.values():
             items.sort(key=lambda it: (-it.req.priority,
                                        self._abs_deadline(it.req, it.t_sub)))
@@ -683,7 +855,7 @@ class DiffusionServeEngine:
         g.deadline = min(r.deadline for r in live_rows)
         g.fn, compile_s = self._executor(g.sig, g.plan, g.state)
         g.compile_s += compile_s
-        self.joined_requests += len(take)
+        self._m_joined.inc(len(take))
         return True
 
     def _select(self) -> tuple[list[_Group], list[_Group]]:
@@ -746,6 +918,7 @@ class DiffusionServeEngine:
         recompiles. Group urgency is recomputed from the LIVE survivors so a
         retired urgent row's priority/deadline does not keep preempting
         other groups on behalf of best-effort leftovers."""
+        self._m_compactions.inc()
         plan_sh, state_sh = self._shardings(g.plan, g.state)
         g.plan = take_rows(g.plan, keep, shardings=plan_sh)
         g.state = SAMPLER.take_state_rows(g.state, keep, shardings=state_sh)
@@ -774,6 +947,10 @@ class DiffusionServeEngine:
         the driver calls it before failing the affected requests' futures."""
         self._pending.clear()
         self._active.clear()
+        self._evicted_results.clear()
+        self._g_queue.set(0)
+        self._g_groups.set(0)
+        self._g_occupancy.set(0.0)
 
     @property
     def num_executors(self) -> int:
@@ -800,29 +977,39 @@ class DiffusionServeEngine:
         ``nfe``. Groups with only finished rows are retired; groups left
         with retired rows rebuild (join or compact) at the next tick's
         admission boundary, before they step again."""
-        self._admit()
-        self.ticks += 1
+        t_tick = time.perf_counter()
+        with self.tracer.span("admit"):
+            self._admit()
+        self._m_ticks.inc()
         finished: list[Result] = []
+        if self._evicted_results:          # deadline enforcement this tick
+            finished += self._evicted_results
+            self._evicted_results = []
         stepped, skipped = self._select()
         for g in skipped:
             g.skipped += 1
         dispatched = []
-        for g in stepped:
-            g.skipped = 0
-            # structural filler rows (pad) are free capacity in a
-            # data-parallel step, not waste; only retired REQUEST rows that
-            # keep stepping count. With compaction on, the admission-time
-            # boundary pass has already joined over / compacted away /
-            # pad-marked every retired row, so this stays zero.
-            self.wasted_row_steps += sum(
-                r.done and not r.pad for r in g.rows)
-            k_vec = jnp.asarray([g.k - r.k0 for r in g.rows], jnp.int32)
-            t0 = time.perf_counter()
-            g.state = g.fn(self._params_exec, g.plan, k_vec, g.state)
-            dispatched.append((g, t0))
+        with self.tracer.span("dispatch"):
+            for g in stepped:
+                g.skipped = 0
+                # structural filler rows (pad) are free capacity in a
+                # data-parallel step, not waste; only retired REQUEST rows
+                # that keep stepping count. With compaction on, the
+                # admission-time boundary pass has already joined over /
+                # compacted away / pad-marked every retired row, so this
+                # stays zero.
+                self._m_wasted.inc(sum(
+                    r.done and not r.pad for r in g.rows))
+                k_vec = jnp.asarray([g.k - r.k0 for r in g.rows], jnp.int32)
+                t0 = time.perf_counter()
+                g.state = g.fn(self._params_exec, g.plan, k_vec, g.state)
+                dispatched.append((g, t0))
         for g, t0 in dispatched:
-            jax.block_until_ready(g.state.x)
-            g.solve_s += time.perf_counter() - t0
+            with self.tracer.span("step_wait"):
+                jax.block_until_ready(g.state.x)
+            dt_step = time.perf_counter() - t0
+            g.solve_s += dt_step
+            self._h_step.observe(dt_step)
             g.k += 1
             newly = [i for i, r in enumerate(g.rows)
                      if not r.done and r.k0 + r.n_steps == g.k]
@@ -855,12 +1042,21 @@ class DiffusionServeEngine:
                     row.done = True
                     # bucketed admission: mask the solve's tail positions
                     # back to the request's true seq_len
-                    finished.append(Result(
+                    res = Result(
                         row.req.uid, new_toks[j][:row.req.seq_len],
                         g.solve_s - row.solve_s0, nfe=row.nfe,
-                        compile_s=g.compile_s, queue_wait_s=row.wait_s))
+                        compile_s=g.compile_s, queue_wait_s=row.wait_s)
+                    self._m_completed.inc()
+                    self._h_queue_wait.observe(res.queue_wait_s)
+                    self._h_solve.observe(res.latency_s)
+                    finished.append(res)
             if not any(not r.done for r in g.rows):
                 self._active.remove(g)
+        self._g_groups.set(len(self._active))
+        slots = sum(len(g.rows) for g in self._active)
+        live = sum(sum(not r.done for r in g.rows) for g in self._active)
+        self._g_occupancy.set(live / slots if slots else 0.0)
+        self._h_tick.observe(time.perf_counter() - t_tick)
         return finished
 
     def serve(self, requests: list[Request], *, on_step=None,

@@ -142,6 +142,153 @@ def test_fuzz_joins_admit_into_inflight_groups(diff_setup):
     assert eng.joined_requests > 0
 
 
+# -------------------------------------- deadline enforcement (storm fuzz)
+def _gen_deadline_storm(fuzz_seed: int, n: int):
+    """Seed -> [(arrival_tick, Request)] with deadlines across the whole
+    spectrum: None (best-effort), 1 microsecond (expired before any tick can
+    admit it -> deterministic pending-shed), a few hundred ms (may expire
+    mid-flight depending on host speed -- genuinely racy on purpose), and
+    60 s (never expires inside a test run). The conservation and
+    bitwise-vs-solo invariants below are schedule-independent, so the racy
+    band is safe to fuzz."""
+    rng = np.random.RandomState(fuzz_seed)
+    out = []
+    for uid in range(n):
+        solver = _SOLVERS[rng.randint(len(_SOLVERS))]
+        deadline = [None, 1e-6, 0.2, 60.0][rng.randint(4)]
+        out.append((int(rng.randint(0, 6)), Request(
+            uid=uid,
+            seq_len=int(rng.randint(5, 9)),
+            nfe=int(rng.randint(3, 9)),
+            solver=solver,
+            eta=1.0 if solver == "ddim_eta" else None,
+            seed=int(rng.randint(0, 100)),
+            priority=int(rng.randint(0, 3)),
+            deadline_s=deadline)))
+    return out
+
+
+@pytest.mark.parametrize("join", [True, False], ids=["joins_on", "joins_off"])
+@pytest.mark.parametrize("fuzz_seed", [0, 1, 2])
+def test_fuzz_deadline_storm_conservation_and_survivors(diff_setup,
+                                                        solo_engine, join,
+                                                        fuzz_seed):
+    """Deadline storms: every submitted request gets EXACTLY one outcome
+    (sample or deadline_exceeded Result, never both, never neither), the
+    registry conserves requests (submitted == completed + evicted), and
+    eviction never perturbs a surviving request's sample (survivors stay
+    bitwise-vs-solo -- eviction recycles rows through the same take_rows
+    boundary path as normal retirement)."""
+    params, cfg = diff_setup
+    workload = _gen_deadline_storm(fuzz_seed, n=12)
+    eng = DiffusionServeEngine(params, cfg, steps_per_tick=2, aging_ticks=3,
+                               max_group=3, join=join, seq_len_buckets=(8,),
+                               enforce_deadlines=True)
+    got = _drive(eng, workload)
+    assert len(got) == len(workload)          # one outcome per request
+    assert sorted(got) == [r.uid for _, r in sorted(workload,
+                                                    key=lambda a: a[1].uid)]
+
+    m = eng.metrics
+    submitted = m.get("serve_submitted_total").value
+    completed = m.get("serve_completed_total").value
+    evicted = m.get("serve_deadline_evicted_total").value
+    assert submitted == len(workload)
+    assert completed + evicted == submitted   # conservation
+    assert completed == sum(not r.deadline_exceeded for r in got.values())
+    assert evicted == sum(r.deadline_exceeded for r in got.values())
+
+    for _, req in workload:
+        res = got[req.uid]
+        if res.deadline_exceeded:
+            # only requests that HAD a finite deadline can be evicted, and
+            # an evicted request delivers no sample
+            assert req.deadline_s is not None and req.deadline_s < 60.0
+            assert res.tokens.size == 0 and res.nfe == 0
+            assert res.queue_wait_s >= 0.0 and res.latency_s >= 0.0
+        else:
+            solo = solo_engine.serve([Request(
+                uid=req.uid, seq_len=req.seq_len, nfe=req.nfe,
+                solver=req.solver, eta=req.eta, seed=req.seed)])[0]
+            np.testing.assert_array_equal(solo.tokens, res.tokens)
+    # microsecond deadlines can never outrun the first admission pass
+    for _, req in workload:
+        if req.deadline_s == 1e-6:
+            assert got[req.uid].deadline_exceeded
+
+
+def test_deadline_enforcement_off_keeps_advisory_behavior(diff_setup):
+    """The default engine treats deadlines as ordering hints only: an
+    already-expired deadline must still be served to completion."""
+    params, cfg = diff_setup
+    eng = DiffusionServeEngine(params, cfg, seq_len_buckets=(8,))
+    res = eng.serve([Request(uid=0, seq_len=8, nfe=3, solver="ddim", seed=0,
+                             deadline_s=1e-6)])[0]
+    assert not res.deadline_exceeded
+    assert res.tokens.size > 0
+    assert eng.metrics.get("serve_deadline_evicted_total").value == 0
+
+
+def test_driver_deadline_exceeded_on_own_stream_with_shed_conservation(
+        diff_setup):
+    """Through the driver, an evicted request fails with DeadlineExceeded on
+    ITS OWN handle (event stream closed, driver alive and serving), sheds
+    are counted, and the stats()/registry view conserves requests:
+    driver_submitted == completed + deadline_evicted, and every submit call
+    is either accepted or shed."""
+    from repro.serving.driver import QueueFull, ServeDriver
+    from repro.serving.engine import DeadlineExceeded
+
+    params, cfg = diff_setup
+    eng = DiffusionServeEngine(params, cfg, seq_len_buckets=(8,),
+                               enforce_deadlines=True)
+    eng.serve([Request(uid=990, seq_len=8, nfe=3, solver="ddim", seed=0)])
+    # the warm serve above already moved the engine's counters; conservation
+    # below is asserted on deltas from here
+    m = eng.metrics
+    base_completed = m.get("serve_completed_total").value
+    base_evicted = m.get("serve_deadline_evicted_total").value
+    with ServeDriver(eng, max_pending=3) as drv:
+        handles, n_submits = {}, 0
+        for i in range(3):
+            handles[i] = drv.submit(Request(
+                uid=i, seq_len=8, nfe=3, solver="ddim", seed=i,
+                deadline_s=1e-6 if i == 0 else None))
+            n_submits += 1
+        # the in-flight set is full: this one must shed with QueueFull
+        extra = drv.submit(Request(uid=99, seq_len=8, nfe=3, solver="ddim",
+                                   seed=9))
+        n_submits += 1
+        with pytest.raises(QueueFull):
+            extra.result(timeout=5)
+
+        with pytest.raises(DeadlineExceeded):
+            handles[0].result(timeout=30)
+        assert list(handles[0]) == []          # stream closed, no events
+        for i in (1, 2):
+            res = handles[i].result(timeout=30)
+            assert not res.deadline_exceeded and res.tokens.size > 0
+        # the driver survived the eviction and still serves
+        late = drv.submit(Request(uid=100, seq_len=8, nfe=3, solver="ddim",
+                                  seed=1))
+        n_submits += 1
+        # same (solver, nfe, seed, seq_len) as uid=1: scheduling after an
+        # eviction still computes the same sample
+        np.testing.assert_array_equal(late.result(timeout=30).tokens,
+                                      handles[1].result().tokens)
+
+        s = drv.stats()
+        assert s["shed"] == 1
+        assert s["submitted"] == n_submits - s["shed"]
+    # drained: exact conservation (deltas exclude the warm-up serve)
+    s = drv.stats()
+    assert s["in_flight"] == 0
+    completed = m.get("serve_completed_total").value - base_completed
+    evicted = m.get("serve_deadline_evicted_total").value - base_evicted
+    assert completed + evicted == s["submitted"]
+    assert evicted == 1
+
+
 # --------------------------------------- 8-device host mesh (subprocess)
 _CHILD_FUZZ = """
 import os
