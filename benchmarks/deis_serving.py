@@ -21,6 +21,11 @@ Three measurements on a reduced backbone:
     pass runs with ZERO recompilation -- compaction's shrunken batch sizes
     included, because they land in the same (signature, batch, seq_len)
     executor cache;
+  * an EARLY-EXIT run: an engine under a RetirePolicy serves a mixed
+    tab2/ddim workload; estimate-carrying rows retire once their embedded
+    local-error estimate converges, and the run ratchets the (deterministic)
+    early-exit count and saved NFEs at tol 0 -- the serving-side payoff of
+    the embedded pairs;
   * a SHARDED mixed-traffic run on a forced 8-device host mesh (subprocess:
     ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` must be set
     before jax imports). Ragged request waves -- including stochastic rows
@@ -283,6 +288,56 @@ def _continuous_admission_rows(params, cfg, quick: bool):
     return rows
 
 
+# -------------------------------------------------- early-exit (saved NFEs)
+def _early_exit_rows(params, cfg, quick: bool):
+    """Adaptive early-exit serving: an engine with a RetirePolicy retires
+    rows whose embedded local-error estimate has converged, spending fewer
+    NFEs than the request budgeted. The workload mixes estimate-carrying
+    tab2 requests with pair-less ddim ones (which must always run their
+    full budget). Early-exit counts and saved NFEs are deterministic
+    functions of the seeded workload and the policy (the retire decision is
+    per-row and timing-independent), so they ratchet at tol 0."""
+    from repro.core.adaptive import RetirePolicy
+
+    n = 6 if quick else 12
+    reqs = [Request(uid=i, seq_len=32, nfe=[6, 9, 12][i % 3],
+                    solver="ddim" if i % 4 == 3 else "tab2", seed=i)
+            for i in range(n)]
+    eng = DiffusionServeEngine(params, cfg, steps_per_tick=2, max_group=4,
+                               retire=RetirePolicy(tol=1.0, min_k=2))
+    eng.serve(list(reqs))                  # cold: compile every bucket
+    m = eng.metrics
+    base_early = m.get("serve_early_exit_total").value
+    base_saved = m.get("serve_saved_nfe_total").value
+    executors_before = eng.num_executors
+    t0 = time.perf_counter()
+    results = eng.serve(list(reqs))        # warm, measured
+    dt = time.perf_counter() - t0
+    assert eng.num_executors == executors_before, (
+        "warm early-exit run recompiled: estimate-carrying plans must reuse "
+        "the (signature, batch, seq_len) executor cache")
+    assert all(r.compile_s == 0.0 for r in results)
+
+    by = {r.uid: r for r in results}
+    budget = {q.uid: q.nfe for q in reqs}
+    early = int(m.get("serve_early_exit_total").value - base_early)
+    saved = int(m.get("serve_saved_nfe_total").value - base_saved)
+    assert early == sum(r.early_exit for r in results) > 0
+    assert saved == sum(budget[u] - by[u].nfe for u in by
+                        if by[u].early_exit) > 0
+    for q in reqs:                         # pair-less rows run their budget
+        if q.solver == "ddim":
+            assert not by[q.uid].early_exit and by[q.uid].nfe == q.nfe
+    total = sum(budget.values())
+    return [{"table": "deis_serving", "solver": "early_exit",
+             "requests": len(reqs), "early_exits": early,
+             "saved_nfe": saved, "budget_nfe": total,
+             "nfe_saved_frac": round(saved / total, 3),
+             "warm_recompiles": 0,
+             "us_per_request": round(dt / len(reqs) * 1e6, 1),
+             "seq_per_s": round(len(reqs) / dt, 2)}]
+
+
 # ------------------------------------------------ sharded (8-device) section
 # Runs in a child process because the forced host-device count only takes
 # effect before jax is imported (this process already has 1 CPU device).
@@ -360,6 +415,7 @@ def run(quick: bool = False):
     rows.append(_mixed_traffic_row(eng, quick))
     rows += _ragged_priority_rows(params, cfg, quick)
     rows += _continuous_admission_rows(params, cfg, quick)
+    rows += _early_exit_rows(params, cfg, quick)
     rows += _sharded_rows(quick)
     return rows
 
@@ -402,6 +458,19 @@ def bench_metrics(rows: list[dict]) -> dict:
             out[f"{pre}.warm_recompiles"] = metric(
                 r["warm_recompiles"], unit="compiles", ratchet=True, tol=0.0)
             out[f"{pre}.mean_wait_ms"] = metric(r["mean_wait_ms"], unit="ms")
+        elif sol == "early_exit":
+            out["early_exit.early_exits"] = metric(
+                r["early_exits"], unit="requests", direction="higher",
+                ratchet=True, tol=0.0)
+            out["early_exit.saved_nfe"] = metric(
+                r["saved_nfe"], unit="evals", direction="higher",
+                ratchet=True, tol=0.0)
+            out["early_exit.warm_recompiles"] = metric(
+                r["warm_recompiles"], unit="compiles", ratchet=True, tol=0.0)
+            out["early_exit.nfe_saved_frac"] = metric(
+                r["nfe_saved_frac"], unit="frac", direction="higher")
+            out["early_exit.us_per_request"] = metric(
+                r["us_per_request"], unit="us")
         elif sol == "mixed":
             out["mixed.executors"] = metric(
                 r["executors"], unit="traces", ratchet=True, tol=0.0)

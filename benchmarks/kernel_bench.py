@@ -1,7 +1,15 @@
 """Kernel microbench: Pallas (interpret) vs jnp reference -- correctness delta
 + structural roofline terms (bytes/flops per call derived analytically; CPU
 wall-time of interpret mode is NOT a TPU proxy and is reported only as
-us_per_call for the harness contract)."""
+us_per_call for the harness contract).
+
+``main`` writes a ``BENCH_kernels.json`` perf-trajectory record via
+``repro.obs.bench``: the analytic roofline terms ratchet at tol 0 (they are
+pure functions of the problem shapes -- drift means the kernel's data
+movement or flop count changed), the kernel-vs-reference error ratchets with
+a generous relative tolerance (catches real numerics regressions without
+tripping on cross-version float noise), and interpret-mode wall time rides
+along unratcheted."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -64,3 +72,49 @@ def run(quick: bool = False):
                  "flops_per_call": flops,
                  "tpu_roofline_us": round(flops / 197e12 * 1e6, 3)})
     return rows
+
+
+# ------------------------------------------------- BENCH_kernels.json record
+def bench_metrics(rows: list[dict]) -> dict:
+    """Convert run() rows into a named metric series for ``obs.bench``."""
+    from repro.obs.bench import metric
+
+    out = {}
+    for r in rows:
+        pre = r["kernel"]
+        out[f"{pre}.max_abs_err"] = metric(
+            r["max_abs_err"], unit="abs", ratchet=True, tol=0.5)
+        out[f"{pre}.tpu_roofline_us"] = metric(
+            r["tpu_roofline_us"], unit="us", ratchet=True, tol=0.0)
+        if "hbm_bytes_per_call" in r:
+            out[f"{pre}.hbm_bytes_per_call"] = metric(
+                r["hbm_bytes_per_call"], unit="bytes", ratchet=True, tol=0.0)
+        if "flops_per_call" in r:
+            out[f"{pre}.flops_per_call"] = metric(
+                r["flops_per_call"], unit="flops", ratchet=True, tol=0.0)
+        out[f"{pre}.us_per_call_interp"] = metric(
+            r["us_per_call_interp"], unit="us")
+    return out
+
+
+def main(argv=None) -> int:
+    import argparse
+
+    from .common import write_bench
+
+    ap = argparse.ArgumentParser(prog="benchmarks.kernel_bench")
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--out", default="BENCH_kernels.json",
+                    help="where to write the bench record (default "
+                         "BENCH_kernels.json in the cwd)")
+    args = ap.parse_args(argv)
+    rows = run(quick=args.quick)
+    for r in rows:
+        print(",".join(f"{k}={v}" for k, v in r.items()))
+    write_bench("kernels", bench_metrics(rows), args.out, quick=args.quick)
+    print(f"wrote {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -30,6 +30,8 @@ from .plan import (SolverPlan, inert_row, join_rows, make_plan, pad_plan,
                    take_rows)
 from .sampler import (Hooks, SamplerState, init_state, join_state_rows,
                       sample, shard_state, step, take_state_rows)
+from .adaptive import (AdaptiveResult, AdaptiveRK23, RetirePolicy,
+                       error_ratio, step_factor)
 from .solvers import make_solver, SOLVER_NAMES
 from .likelihood import nll_bits_per_dim
 
@@ -42,6 +44,8 @@ __all__ = [
     "plan_pndm", "solver_stages", "stack_plans", "take_rows",
     "Hooks", "SamplerState", "init_state", "join_state_rows", "sample",
     "shard_state", "step", "take_state_rows",
+    "AdaptiveResult", "AdaptiveRK23", "RetirePolicy", "error_ratio",
+    "step_factor",
     "make_solver", "SOLVER_NAMES",
     "nll_bits_per_dim",
 ]

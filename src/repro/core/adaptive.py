@@ -1,16 +1,31 @@
-"""Adaptive-step rhoRK (Bogacki-Shampine 3(2), RK45-class) with rejection
-accounting -- implements the paper's App. B Q2 analysis:
+"""Adaptive-step error control: the shared estimate/accept/rescale policy.
 
-    "Most existing adaptive step size strategies have some probability of
-     getting rejected for the proposed step size, which will waste the NFE
-     budget ... one rejection will waste 5 NFE, which is unacceptable when we
-     try to generate samples in 10 NFE."
+Two consumers sit on the same machinery:
 
-We integrate the transformed non-stiff ODE dy/drho = eps_hat(y, rho)
-(Prop. 3) with an embedded 3(2) pair and PI step control, counting BOTH
-accepted and rejected evaluations. benchmarks/adaptive_bench.py shows the
-fixed-grid tAB-DEIS dominating at small budgets, reproducing the paper's
-argument quantitatively.
+* :class:`AdaptiveRK23` -- adaptive-step rhoRK (Bogacki-Shampine 3(2)) with
+  rejection accounting, implementing the paper's App. B Q2 analysis:
+
+      "Most existing adaptive step size strategies have some probability of
+       getting rejected for the proposed step size, which will waste the NFE
+       budget ... one rejection will waste 5 NFE, which is unacceptable when
+       we try to generate samples in 10 NFE."
+
+  We integrate the transformed non-stiff ODE dy/drho = eps_hat(y, rho)
+  (Prop. 3) with an embedded 3(2) pair and PI step control, counting BOTH
+  accepted and rejected evaluations. benchmarks/adaptive_bench.py shows the
+  fixed-grid tAB-DEIS dominating at small budgets, reproducing the paper's
+  argument quantitatively.
+
+* :class:`RetirePolicy` -- the serving-side half of the same idea: fixed-grid
+  plans built with ``error_estimate=True`` maintain a per-row local-error
+  estimate in ``SamplerState.err`` (embedded lower-order pair, zero extra
+  NFE), and the serving engine's boundary pass retires rows early once the
+  estimate clears the policy's tolerance. Where AdaptiveRK23 *rescales* the
+  step on the estimate, RetirePolicy *stops* on it -- both are thin policies
+  over one error-norm, and neither spends NFEs on the estimate itself.
+
+The shared pieces (:func:`error_ratio`, :func:`step_factor`) are module
+functions so the two policies can never drift apart numerically.
 """
 from __future__ import annotations
 
@@ -23,6 +38,62 @@ import numpy as np
 from .plan import _f64
 from .sampler import SamplerState
 from .sde import SDE
+
+
+def error_ratio(y_hi, y_lo, y_prev, atol: float, rtol: float) -> float:
+    """Scaled Linf error of an embedded pair: max |y_hi - y_lo| / scale with
+    the standard elementwise scale ``atol + rtol * max(|y_hi|, |y_prev|)``.
+    <= 1 means the step is acceptable at these tolerances."""
+    return float(jnp.max(jnp.abs(y_hi - y_lo) /
+                         (atol + rtol * jnp.maximum(
+                             jnp.abs(y_hi), jnp.abs(y_prev)))))
+
+
+def step_factor(err: float) -> float:
+    """Classic third-order step rescale on an :func:`error_ratio` value:
+    0.9 err^(-1/3), clipped to [0.2, 5]. err == 0 (exactly integrable eps,
+    e.g. affine) takes the max growth."""
+    return float(np.clip(0.9 * max(err, 1e-12) ** (-1 / 3), 0.2, 5.0))
+
+
+@dataclasses.dataclass(frozen=True)
+class RetirePolicy:
+    """Early-exit decision over ``SamplerState.err`` (serving's boundary
+    pass): a row whose running local-error estimate has dropped to ``tol``
+    (absolute, or relative to the row's own Linf magnitude) after at least
+    ``min_k`` of its own steps is converged and retires early.
+
+    The decision is a pure per-row function of ``(err, k_own, |x|_inf)`` --
+    nothing about the group a row is batched with enters it -- which is what
+    keeps early-exit serving bitwise-vs-solo: a solo solve under the same
+    policy retires at the identical step. Rows whose plan carries no embedded
+    pair report ``err == +inf`` and never converge here.
+    """
+
+    tol: float
+    min_k: int = 2        # floor of own-steps before the estimate is trusted
+    norm: str = "abs"     # "abs": err <= tol; "rel": err <= tol * |x|_inf
+
+    def __post_init__(self):
+        if not (self.tol > 0):
+            raise ValueError(f"tol must be positive, got {self.tol!r}")
+        if self.norm not in ("abs", "rel"):
+            raise ValueError(f"norm must be 'abs' or 'rel', got {self.norm!r}")
+        if self.min_k < 1:
+            raise ValueError(f"min_k must be >= 1, got {self.min_k!r}")
+
+    def converged(self, err, x_inf=None):
+        """Elementwise convergence mask (host-side numpy; err/x_inf are
+        per-row vectors or scalars). ``x_inf`` (per-row Linf of the iterate)
+        is required for ``norm='rel'`` and ignored for ``norm='abs'``."""
+        err = np.asarray(err, np.float64)
+        if self.norm == "rel":
+            if x_inf is None:
+                raise ValueError("norm='rel' needs the per-row |x|_inf scale")
+            bound = self.tol * np.maximum(np.asarray(x_inf, np.float64), 1e-12)
+        else:
+            bound = self.tol
+        return np.isfinite(err) & (err <= bound)
 
 
 @dataclasses.dataclass
@@ -52,7 +123,9 @@ class AdaptiveRK23:
     :class:`~repro.core.plan.SolverPlan` (no fixed grid exists to
     precompute), so it never rode the legacy ``SolverBase`` machinery's
     plan delegation -- only its attribute layout, inlined here when the
-    class shims were removed.
+    class shims were removed. Accept/reject and step rescaling go through
+    the module-level :func:`error_ratio` / :func:`step_factor`, the same
+    primitives serving's :class:`RetirePolicy` is built on.
     """
 
     def __init__(self, sde: SDE, rtol: float = 1e-2, atol: float = 1e-2,
@@ -77,6 +150,7 @@ class AdaptiveRK23:
         rho = rho_hi
         h = -(rho_hi - rho_lo) * 0.05   # initial step: 5% of the interval
         nfe = n_acc = n_rej = 0
+        last_err = float("inf")          # y-space Linf of the last accepted pair
         k1 = eval_eps(y, rho)
         nfe += 1
         for _ in range(self.max_steps):
@@ -90,17 +164,17 @@ class AdaptiveRK23:
             k4 = eval_eps(y3, rho + h)
             nfe += 1
             y2 = y + h * (7 / 24 * k1 + 1 / 4 * k2 + 1 / 3 * k3 + 1 / 8 * k4)
-            err = float(jnp.max(jnp.abs(y3 - y2) /
-                                (self.atol + self.rtol * jnp.maximum(
-                                    jnp.abs(y3), jnp.abs(y)))))
+            err = error_ratio(y3, y2, y, self.atol, self.rtol)
             if err <= 1.0:
+                last_err = float(jnp.max(jnp.abs(y3 - y2)))
                 y, rho, k1 = y3, rho + h, k4   # FSAL
                 n_acc += 1
             else:
                 n_rej += 1
-            # err == 0 (exactly integrable eps, e.g. affine): take the max growth
-            h = h * float(np.clip(0.9 * max(err, 1e-12) ** (-1 / 3), 0.2, 5.0))
-        x0 = float(self.sde.mu(self.sde.t0)) * y
+            h = h * step_factor(err)
+        mu_0 = float(self.sde.mu(self.sde.t0))
+        x0 = mu_0 * y
         state = SamplerState(x=x0, hist=jnp.zeros((0,) + x0.shape, x0.dtype),
-                             key=jax.random.PRNGKey(0), k=jnp.int32(n_acc))
+                             key=jax.random.PRNGKey(0), k=jnp.int32(n_acc),
+                             err=jnp.asarray(mu_0 * last_err, x0.dtype))
         return AdaptiveResult(state, nfe, n_acc, n_rej)

@@ -65,6 +65,12 @@ class SolverPlan:
     fused: bool = dataclasses.field(default=False, metadata=dict(static=True))
     nfe: int = dataclasses.field(default=0, metadata=dict(static=True))
     stacked: bool = dataclasses.field(default=False, metadata=dict(static=True))
+    # True when the plan carries an embedded lower-order companion ("E" for
+    # the ab/pndm families, "b_err" for rk): step() then maintains a per-row
+    # local-error estimate in SamplerState.err. Static because it changes the
+    # executor trace (the estimate is extra compute + an extra output leaf).
+    error_estimate: bool = dataclasses.field(default=False,
+                                             metadata=dict(static=True))
 
     @property
     def n_steps(self) -> int:
@@ -93,7 +99,7 @@ class SolverPlan:
         leaves = tuple(sorted((k, tuple(v.shape), str(v.dtype))
                               for k, v in self.coeffs.items()))
         return (self.method, self.stochastic, self.fused, self.stacked,
-                tuple(self.ts.shape), leaves)
+                self.error_estimate, tuple(self.ts.shape), leaves)
 
     @property
     def family(self) -> tuple:
@@ -117,7 +123,8 @@ class SolverPlan:
 
         leaves = tuple(sorted((k, wild(k, tuple(v.shape)), str(v.dtype))
                               for k, v in self.coeffs.items()))
-        return (self.method, self.stochastic, self.fused, ("*",), leaves)
+        return (self.method, self.stochastic, self.fused,
+                self.error_estimate, ("*",), leaves)
 
     def astype(self, dtype) -> "SolverPlan":
         """Cast floating leaves to ``dtype`` (no-op fast path when already
@@ -177,7 +184,8 @@ def stack_plans(plans) -> SolverPlan:
 # what ragged-NFE serving relies on: `pad_plan` extends exactly these axes
 # and `SolverPlan.family` wildcards them, so the two can never disagree about
 # which leaves carry the step dimension.
-_PER_STEP_COEFFS = frozenset({"psi", "C", "s", "h", "stage_t", "stage_mu", "A"})
+_PER_STEP_COEFFS = frozenset({"psi", "C", "E", "s", "h", "stage_t",
+                              "stage_mu", "A"})
 _PER_KNOT_COEFFS = frozenset({"mu"})
 # time-like per-step leaves are edge-replicated (not zero-padded) so padded
 # steps never evaluate the eps network at an out-of-domain t
@@ -265,7 +273,7 @@ def _rowless_signature(plan: SolverPlan) -> tuple:
     into one group without changing the executor trace family."""
     leaves = tuple(sorted((k, tuple(v.shape[1:]), str(v.dtype))
                           for k, v in plan.coeffs.items()))
-    return (plan.method, plan.stochastic, plan.fused,
+    return (plan.method, plan.stochastic, plan.fused, plan.error_estimate,
             tuple(plan.ts.shape[1:]), leaves)
 
 
@@ -348,19 +356,30 @@ def inert_row(plan: SolverPlan) -> SolverPlan:
 
 
 def _mk(method: str, coeffs: dict, ts: np.ndarray, *, stochastic=False,
-        fused=False, nfe: int) -> SolverPlan:
+        fused=False, nfe: int, error_estimate=False) -> SolverPlan:
     coeffs = {k: jnp.asarray(v) for k, v in coeffs.items()}
     return SolverPlan(coeffs=coeffs, ts=jnp.asarray(_f64(ts)), method=method,
-                      stochastic=stochastic, fused=fused, nfe=nfe)
+                      stochastic=stochastic, fused=fused, nfe=nfe,
+                      error_estimate=error_estimate)
 
 
 # --------------------------------------------------------------------- AB
 def plan_ab(sde: SDE, ts, order: int = 0, basis: str = "t",
-            naive_ei: bool = False, fused: bool = False) -> SolverPlan:
+            naive_ei: bool = False, fused: bool = False,
+            error_estimate: bool = False) -> SolverPlan:
     """tAB/rhoAB-DEIS (Eq. 14); r=0 == deterministic DDIM (Prop. 2).
 
     ``fused`` routes the multistep combination through the Pallas
     ``deis_step`` kernel (one HBM round-trip instead of r+2).
+
+    ``error_estimate`` adds the embedded order-(r-1) companion weights
+    ``E = C_r - C_{r-1}`` (zero-padded to C's width): ``E[k] @ hist`` is the
+    difference between this step's update and the one-order-lower update --
+    a free local-error proxy from the SAME eps evaluations (the DPM-Solver
+    trick). Warmup rows, where both orders coincide, are exactly zero, which
+    ``step()`` reads as "no estimate yet". Order 0 has no lower order, so the
+    request is ignored there (the plan's ``error_estimate`` stays False and
+    such rows never early-exit).
     """
     ts = _f64(ts)
     if naive_ei:
@@ -369,7 +388,15 @@ def plan_ab(sde: SDE, ts, order: int = 0, basis: str = "t",
         psi, Cm = C.naive_ei_coefficients(sde, ts)
     else:
         psi, Cm = C.ab_coefficients(sde, ts, order, basis)
-    return _mk("ab", {"psi": psi, "C": Cm}, ts, fused=fused, nfe=len(ts) - 1)
+    coeffs = {"psi": psi, "C": Cm}
+    has_pair = error_estimate and order >= 1 and not naive_ei
+    if has_pair:
+        _, C_lo = C.ab_coefficients(sde, ts, order - 1, basis)
+        E = np.array(Cm, dtype=np.float64, copy=True)
+        E[:, :order] -= C_lo
+        coeffs["E"] = E
+    return _mk("ab", coeffs, ts, fused=fused, nfe=len(ts) - 1,
+               error_estimate=has_pair)
 
 
 def plan_ddim(sde: VPSDE, ts, eta: float = 0.0) -> SolverPlan:
@@ -412,9 +439,14 @@ def plan_em(sde: SDE, ts, lam: float = 1.0) -> SolverPlan:
                stochastic=True, nfe=len(ts) - 1)
 
 
-def plan_ipndm(sde: SDE, ts, order: int = 3) -> SolverPlan:
+def plan_ipndm(sde: SDE, ts, order: int = 3,
+               error_estimate: bool = False) -> SolverPlan:
     """Improved PNDM (App. H.2, Algo 4): classical uniform-grid AB weights
-    with lower-order warmup, folded into the AB coefficient matrix."""
+    with lower-order warmup, folded into the AB coefficient matrix.
+
+    ``error_estimate`` folds the classical AB pair the same way:
+    ``E[k] = C0[k] * (W[r_eff] - W[r_eff - 1])``, zero at k=0 (no lower
+    order to compare against yet)."""
     ts = _f64(ts)
     psi, C0 = C.ab_coefficients(sde, ts, 0, "t")
     n = len(ts) - 1
@@ -422,7 +454,16 @@ def plan_ipndm(sde: SDE, ts, order: int = 3) -> SolverPlan:
     for k in range(n):
         r_eff = min(order, k)
         Cm[k, : r_eff + 1] = C0[k, 0] * C.AB_WEIGHTS[r_eff]
-    return _mk("ab", {"psi": psi, "C": Cm}, ts, nfe=n)
+    coeffs = {"psi": psi, "C": Cm}
+    has_pair = error_estimate and order >= 1
+    if has_pair:
+        E = np.zeros((n, order + 1))
+        for k in range(1, n):
+            r_eff = min(order, k)
+            E[k, : r_eff + 1] = C0[k, 0] * C.AB_WEIGHTS[r_eff]
+            E[k, : r_eff] -= C0[k, 0] * C.AB_WEIGHTS[r_eff - 1]
+        coeffs["E"] = E
+    return _mk("ab", coeffs, ts, nfe=n, error_estimate=has_pair)
 
 
 # --------------------------------------------------------------------- RK
@@ -442,12 +483,29 @@ _TABLEAUS = {
 }
 
 
-def plan_rk(sde: SDE, ts, method: str = "heun") -> SolverPlan:
+# lower-order companion weights per tableau: Euler-from-stage-0 for the
+# 2-stage methods, the embedded midpoint rule for the 3/4-stage ones.
+# b_err = b - b_lo turns the stage evals already in hand into a local-error
+# proxy (err = |mu h (b_err . ks)| in x-space) at zero extra NFE.
+_B_LO = {
+    "heun": np.array([1.0, 0.0]),
+    "midpoint": np.array([1.0, 0.0]),
+    "kutta3": np.array([0.0, 1.0, 0.0]),
+    "rk4": np.array([0.0, 1.0, 0.0, 0.0]),
+}
+
+
+def plan_rk(sde: SDE, ts, method: str = "heun",
+            error_estimate: bool = False) -> SolverPlan:
     """rhoRK-DEIS: explicit RK on dy/drho = eps_hat(y, rho) (Eq. 17, Prop. 3).
 
     ``method`` in {heun, midpoint, kutta3, rk4, dpm2}; ``dpm2`` is
     DPM-Solver-2 (Lu et al. 2022): midpoint with its stage at the geometric
     mean of (rho_k, rho_{k+1}), expressed here as a per-step a21.
+
+    ``error_estimate`` adds the embedded companion weights ``b_err`` (full
+    tableau minus a lower-order rule over the same stages); every step then
+    yields a local-error estimate from the stage evals already computed.
     """
     ts = _f64(ts)
     n = len(ts) - 1
@@ -473,14 +531,19 @@ def plan_rk(sde: SDE, ts, method: str = "heun") -> SolverPlan:
     stage_t = _f64(sde.t_of_rho(stage_rho))
     coeffs = {"h": h, "mu": _f64(sde.mu(ts)), "stage_t": stage_t,
               "stage_mu": _f64(sde.mu(stage_t)), "A": A, "b": b}
-    return _mk("rk", coeffs, ts, nfe=n * s)
+    if error_estimate:
+        coeffs["b_err"] = b - _B_LO["midpoint" if method == "dpm2" else method]
+    return _mk("rk", coeffs, ts, nfe=n * s, error_estimate=error_estimate)
 
 
 # ------------------------------------------------------------------- PNDM
-def plan_pndm(sde: SDE, ts) -> SolverPlan:
+def plan_pndm(sde: SDE, ts, error_estimate: bool = False) -> SolverPlan:
     """Original PNDM (Liu et al. 2022): pseudo-RK4 warmup for the first 3
     steps (4 NFE each, DDIM transfers precomputed as affine ratios) then
-    4th-order AB with DDIM transfer. NFE = N + 9."""
+    4th-order AB with DDIM transfer. NFE = N + 9.
+
+    ``error_estimate`` equips the AB4 tail with the AB3 companion
+    (``E = C0 * (W4 - W3)``); warmup rows carry no estimate (zero rows)."""
     ts = _f64(ts)
     n = len(ts) - 1
     if n < 4:
@@ -502,7 +565,13 @@ def plan_pndm(sde: SDE, ts) -> SolverPlan:
     Cm = np.zeros((n, 4))
     Cm[w:] = C0[w:, :1] * C.AB_WEIGHTS[3][None, :]
     coeffs.update(psi=psi, C=Cm)
-    return _mk("pndm", coeffs, ts, nfe=n + 9)
+    if error_estimate:
+        w_err = np.array(C.AB_WEIGHTS[3], dtype=np.float64, copy=True)
+        w_err[:3] -= C.AB_WEIGHTS[2]
+        E = np.zeros((n, 4))
+        E[w:] = C0[w:, :1] * w_err[None, :]
+        coeffs["E"] = E
+    return _mk("pndm", coeffs, ts, nfe=n + 9, error_estimate=error_estimate)
 
 
 # ---------------------------------------------------------------- factory
@@ -523,18 +592,27 @@ def make_plan(name: str, sde: SDE, ts, **kw) -> SolverPlan:
     """Name-based factory mirroring ``make_solver``. Names: ddim, tab{0..3},
     rhoab{0..3}, rho_heun, rho_midpoint, rho_kutta3, rho_rk4, dpm2, euler,
     naive_ei, em, ddim_eta (requires explicit ``eta=``), ipndm{1..3}, pndm.
+
+    ``error_estimate=True`` requests embedded local-error estimates and is
+    accepted for EVERY name: families with a genuine lower-order pair
+    (order>=1 ab/ipndm, rk, pndm) emit companion coefficients; the rest
+    ignore the request (their plans keep ``error_estimate=False``), so a
+    serving engine can ask uniformly across mixed traffic.
     """
     n = name.lower()
+    ee = bool(kw.pop("error_estimate", False))
     if n in ("ddim", "tab0", "rhoab0"):
-        return plan_ab(sde, ts, order=0, basis="t", **kw)
+        return plan_ab(sde, ts, order=0, basis="t", error_estimate=ee, **kw)
     if n.startswith("tab"):
-        return plan_ab(sde, ts, order=int(n[3:]), basis="t", **kw)
+        return plan_ab(sde, ts, order=int(n[3:]), basis="t",
+                       error_estimate=ee, **kw)
     if n.startswith("rhoab"):
-        return plan_ab(sde, ts, order=int(n[5:]), basis="rho", **kw)
+        return plan_ab(sde, ts, order=int(n[5:]), basis="rho",
+                       error_estimate=ee, **kw)
     if n.startswith("rho_"):
-        return plan_rk(sde, ts, method=n[4:])
+        return plan_rk(sde, ts, method=n[4:], error_estimate=ee)
     if n == "dpm2":
-        return plan_rk(sde, ts, method="dpm2")
+        return plan_rk(sde, ts, method="dpm2", error_estimate=ee)
     if n == "euler":
         return plan_euler(sde, ts)
     if n == "naive_ei":
@@ -548,7 +626,7 @@ def make_plan(name: str, sde: SDE, ts, **kw) -> SolverPlan:
         return plan_ddim(sde, ts, eta=kw["eta"])
     if n.startswith("ipndm"):
         order = int(n[5:]) if len(n) > 5 else 3
-        return plan_ipndm(sde, ts, order=order)
+        return plan_ipndm(sde, ts, order=order, error_estimate=ee)
     if n == "pndm":
-        return plan_pndm(sde, ts)
+        return plan_pndm(sde, ts, error_estimate=ee)
     raise ValueError(f"unknown solver {name!r}")

@@ -71,6 +71,16 @@ class SamplerState(NamedTuple):
     hist: Array   # (R, *x.shape) eps history, newest first (R may be 0)
     key: Array    # PRNG key (consumed only by stochastic plans)
     k: Array      # int32 step counter (informational; `step` takes k explicitly)
+    err: Array    # running local-error estimate: max-abs (Linf) of the last
+    #               step's embedded lower-order difference; (R,) stacked,
+    #               scalar unstacked. +inf until the plan produces a first
+    #               estimate (plans without `error_estimate`, warmup steps);
+    #               steps with zeroed companion weights (inert/padded rows)
+    #               leave it unchanged. Linf deliberately: max-reductions are
+    #               reduction-order independent, so err is bitwise identical
+    #               across batch compositions -- the serving early-exit
+    #               invariant (retire at the same k as a solo solve) rests
+    #               on this.
 
 
 @dataclasses.dataclass(frozen=True)
@@ -115,7 +125,8 @@ def init_state(plan: SolverPlan, x_T: Array, key: Optional[Array] = None) -> Sam
     elif key is None:
         key = jax.random.PRNGKey(0)
     hist = jnp.zeros((plan.history_len,) + x_T.shape, x_T.dtype)
-    return SamplerState(x=x_T, hist=hist, key=key, k=jnp.int32(0))
+    err = jnp.full(x_T.shape[:1] if plan.stacked else (), jnp.inf, x_T.dtype)
+    return SamplerState(x=x_T, hist=hist, key=key, k=jnp.int32(0), err=err)
 
 
 def take_state_rows(state: SamplerState, rows, shardings=None) -> SamplerState:
@@ -141,7 +152,7 @@ def take_state_rows(state: SamplerState, rows, shardings=None) -> SamplerState:
         raise ValueError(f"rows must be a non-empty 1-D index sequence, got "
                          f"shape {idx.shape}")
     out = SamplerState(x=state.x[idx], hist=state.hist[:, idx],
-                       key=state.key[idx], k=state.k)
+                       key=state.key[idx], k=state.k, err=state.err[idx])
     if shardings is not None:
         out = jax.device_put(out, shardings)
     return out
@@ -176,7 +187,8 @@ def join_state_rows(state: SamplerState, new: SamplerState,
     out = SamplerState(x=jnp.concatenate([state.x, new.x], axis=0),
                        hist=jnp.concatenate([state.hist, new.hist], axis=1),
                        key=jnp.concatenate([state.key, new.key], axis=0),
-                       k=state.k)
+                       k=state.k,
+                       err=jnp.concatenate([state.err, new.err], axis=0))
     if shardings is not None:
         out = jax.device_put(out, shardings)
     return out
@@ -245,6 +257,16 @@ def _comb(w, hist, stacked: bool):
     return jnp.tensordot(w, hist, axes=1)
 
 
+def _update_err(loc, live, prev, stacked: bool):
+    """Fold one step's embedded-pair difference ``loc`` into the running
+    per-row estimate: Linf (max-abs over inner dims) where the companion
+    weights were live, previous value elsewhere (warmup rows, inert/padded
+    steps -- their zeroed weights would read as spurious convergence)."""
+    axes = tuple(range(1, loc.ndim)) if stacked else None
+    raw = jnp.max(jnp.abs(loc), axis=axes)
+    return jnp.where(live, raw, prev)
+
+
 def _split_keys(key, stacked: bool):
     """split() that treats a (R, 2) leaf as R independent per-request keys."""
     if stacked:
@@ -291,7 +313,13 @@ def _step_ab(plan: SolverPlan, k, state: SamplerState, eps_fn: EpsFn,
     if plan.stochastic:
         s = _at_step(c["s"], k, stk)
         x_new = x_new + bcast(s, x) * _noise_like(sub, x, stk)
-    return SamplerState(x=x_new, hist=hist, key=key, k=state.k + 1)
+    if "E" in c:
+        Ew = _at_step(c["E"], k, stk)
+        err = _update_err(_comb(Ew, hist, stk), jnp.any(Ew != 0, axis=-1),
+                          state.err, stk)
+    else:
+        err = state.err
+    return SamplerState(x=x_new, hist=hist, key=key, k=state.k + 1, err=err)
 
 
 def _step_rk(plan: SolverPlan, k, state: SamplerState, eps_fn: EpsFn,
@@ -312,8 +340,17 @@ def _step_rk(plan: SolverPlan, k, state: SamplerState, eps_fn: EpsFn,
         k_i = _apply_eps(hooks, x_i, st_t, eps_fn(x_i, st_t))
         ks = ks.at[i].set(k_i)
     y = y + bcast(h, x) * _comb(c["b"], ks, stk)
-    return SamplerState(x=bcast(_at_step(c["mu"], k + 1, stk), x) * y,
-                        hist=state.hist, key=state.key, k=state.k + 1)
+    mu_next = _at_step(c["mu"], k + 1, stk)
+    if "b_err" in c:
+        # embedded pair difference, mapped to x-space through the same
+        # mu-weighting the iterate gets
+        loc = bcast(mu_next, x) * (bcast(h, x) * _comb(c["b_err"], ks, stk))
+        err = _update_err(loc, h != 0, state.err, stk)
+    else:
+        err = state.err
+    return SamplerState(x=bcast(mu_next, x) * y,
+                        hist=state.hist, key=state.key, k=state.k + 1,
+                        err=err)
 
 
 _N_WARMUP = 3  # PNDM pseudo-RK4 warmup steps
@@ -347,7 +384,9 @@ def _pndm_warmup(plan: SolverPlan, k, state: SamplerState, eps_fn: EpsFn,
     e_prime = (e1 + 2 * e2 + 2 * e3 + e4) / 6.0
     x_new = rn * x + cn * e_prime
     hist = jnp.concatenate([e1[None], state.hist[:-1]], axis=0)
-    return SamplerState(x=x_new, hist=hist, key=state.key, k=state.k + 1)
+    # warmup has no embedded pair: err passes through (stays +inf pre-tail)
+    return SamplerState(x=x_new, hist=hist, key=state.key, k=state.k + 1,
+                        err=state.err)
 
 
 def _pndm_tail(plan: SolverPlan, k, state: SamplerState, eps_fn: EpsFn,
@@ -360,7 +399,14 @@ def _pndm_tail(plan: SolverPlan, k, state: SamplerState, eps_fn: EpsFn,
     e = _apply_eps(hooks, x, t_k, eps_fn(x, t_k))
     hist = jnp.concatenate([e[None], state.hist[:-1]], axis=0)
     x_new = bcast(psi, x) * x + _comb(Cw, hist, stk)
-    return SamplerState(x=x_new, hist=hist, key=state.key, k=state.k + 1)
+    if "E" in c:
+        Ew = _at_step(c["E"], k, stk)
+        err = _update_err(_comb(Ew, hist, stk), jnp.any(Ew != 0, axis=-1),
+                          state.err, stk)
+    else:
+        err = state.err
+    return SamplerState(x=x_new, hist=hist, key=state.key, k=state.k + 1,
+                        err=err)
 
 
 def _pndm_rowwise(plan: SolverPlan, k, state: SamplerState, eps_fn: EpsFn,
@@ -378,7 +424,8 @@ def _pndm_rowwise(plan: SolverPlan, k, state: SamplerState, eps_fn: EpsFn,
         m = bcast(k < _N_WARMUP, st.x)               # (R, 1, ...)
         return SamplerState(x=jnp.where(m, w.x, t.x),
                             hist=jnp.where(m[None], w.hist, t.hist),
-                            key=st.key, k=st.k + 1)
+                            key=st.key, k=st.k + 1,
+                            err=jnp.where(k < _N_WARMUP, w.err, t.err))
 
     return jax.lax.cond(
         jnp.all(k < _N_WARMUP), warm,

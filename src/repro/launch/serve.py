@@ -101,6 +101,20 @@ def make_http_server(driver: ServeDriver, port: int = 0):
             return self._json(404, {"error": f"no route {self.path}"})
 
         def do_POST(self):
+            if self.path in ("/cancel", "/v1/cancel"):
+                # body {"uid": n}: best-effort cancellation of an in-flight
+                # request (uids are server-assigned; streaming clients read
+                # theirs off the NDJSON step lines). Races with completion
+                # resolve in favor of the sample -- "cancelled": false then.
+                try:
+                    n = int(self.headers.get("Content-Length") or 0)
+                    body = json.loads(self.rfile.read(n) or b"{}")
+                    uid = int(body["uid"])
+                except (KeyError, ValueError, TypeError,
+                        json.JSONDecodeError) as e:
+                    return self._json(400, {"error": f"bad cancel body: {e}"})
+                return self._json(200, {"uid": uid,
+                                        "cancelled": driver.cancel(uid)})
             if self.path not in ("/generate", "/v1/generate"):
                 return self._json(404, {"error": f"no route {self.path}"})
             try:
@@ -147,6 +161,10 @@ def make_http_server(driver: ServeDriver, port: int = 0):
                         "n_steps": ev.n_steps}
                 if ev.tokens is not None:
                     line["tokens"] = np.asarray(ev.tokens).tolist()
+                # +inf (no estimate yet) has no strict-JSON literal: the
+                # err field appears only once a genuine estimate exists
+                if ev.row_err is not None and np.isfinite(ev.row_err[0]):
+                    line["err"] = float(ev.row_err[0])
                 self.wfile.write((json.dumps(line) + "\n").encode())
                 self.wfile.flush()
             try:
@@ -165,7 +183,8 @@ def make_http_server(driver: ServeDriver, port: int = 0):
 def _result_json(res) -> dict:
     return {"uid": res.uid, "tokens": np.asarray(res.tokens).tolist(),
             "latency_s": res.latency_s, "nfe": res.nfe,
-            "compile_s": res.compile_s}
+            "compile_s": res.compile_s, "early_exit": res.early_exit,
+            "final_err": res.final_err}
 
 
 async def _driver_demo(driver: ServeDriver, n_requests: int, seq_len: int):
@@ -217,6 +236,17 @@ def main():
     ap.add_argument("--max-pending", type=int, default=None,
                     help="driver backpressure: bound on in-flight requests; "
                          "over it, submits are shed with QueueFull (HTTP 429)")
+    ap.add_argument("--early-exit-tol", type=float, default=None,
+                    help="retire rows early once their embedded local-error "
+                         "estimate drops to TOL (plans compile with "
+                         "error_estimate=True; solvers without an embedded "
+                         "pair always run their full budget). Results carry "
+                         "early_exit/final_err; saved NFEs are counted in "
+                         "serve_saved_nfe_total")
+    ap.add_argument("--early-exit-min-k", type=int, default=2,
+                    help="own-steps floor before the estimate is trusted")
+    ap.add_argument("--early-exit-norm", choices=["abs", "rel"], default="abs",
+                    help="abs: err <= tol; rel: err <= tol * |x|_inf per row")
     ap.add_argument("--enforce-deadlines", action="store_true",
                     help="evict requests whose absolute deadline passes "
                          "(pending or mid-flight); each evicted request "
@@ -256,13 +286,21 @@ def main():
                   "axis 'data' (group sizes round up to multiples)")
         buckets = tuple(int(e) for e in args.seq_len_buckets.split(",")) \
             if args.seq_len_buckets else None
+        retire = None
+        if args.early_exit_tol is not None:
+            from ..core.adaptive import RetirePolicy
+            retire = RetirePolicy(tol=args.early_exit_tol,
+                                  min_k=args.early_exit_min_k,
+                                  norm=args.early_exit_norm)
+            print(f"early exit on: {retire}")
         eng = DiffusionServeEngine(params, cfg,
                                    steps_per_tick=args.steps_per_tick,
                                    compaction=not args.no_compaction,
                                    join=not args.no_join,
                                    seq_len_buckets=buckets,
                                    mesh=mesh,
-                                   enforce_deadlines=args.enforce_deadlines)
+                                   enforce_deadlines=args.enforce_deadlines,
+                                   retire=retire)
         if args.trace_annotate:
             eng.tracer = Tracer(eng.metrics, annotate=True)
         exporter = NdjsonExporter(args.metrics_ndjson,
@@ -310,8 +348,15 @@ def main():
                 f"  step {e.k}/{e.n_steps} for uids {e.uids}"))
         for r in results[:4]:
             print(f"req {r.uid}: nfe={r.nfe} solve={r.latency_s:.2f}s "
-                  f"compile={r.compile_s:.2f}s tokens[:10]={r.tokens[:10]}")
+                  f"compile={r.compile_s:.2f}s early_exit={r.early_exit} "
+                  f"tokens[:10]={r.tokens[:10]}")
         print(f"served {len(results)} requests")
+        if retire is not None:
+            m = eng.metrics
+            print(f"early exits: "
+                  f"{int(m.get('serve_early_exit_total').value)}/"
+                  f"{len(results)}, saved NFEs: "
+                  f"{int(m.get('serve_saved_nfe_total').value)}")
         if exporter is not None:
             exporter.write(eng.metrics)
             exporter.close()

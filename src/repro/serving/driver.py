@@ -52,10 +52,11 @@ import time
 from concurrent.futures import Future
 from typing import Iterator, Optional
 
-from .engine import (DeadlineExceeded, DiffusionServeEngine, Request, Result,
-                     StepEvent)
+from .engine import (Cancelled, DeadlineExceeded, DiffusionServeEngine,
+                     Request, Result, StepEvent)
 
 _CLOSE = object()   # stream sentinel: no more events
+_CANCEL = object()  # inbox sentinel: (sentinel, uid) cancellation order
 
 
 class QueueFull(RuntimeError):
@@ -282,6 +283,31 @@ class ServeDriver:
         """Asyncio twin of :meth:`submit` (same queue, same guarantees)."""
         return AsyncServeStream(self.submit(request))
 
+    def cancel(self, uid: int) -> bool:
+        """Request cancellation of an in-flight request (thread-safe,
+        non-blocking, best-effort).
+
+        The order rides the SAME inbox as submissions, so it can never
+        outrun its own request: by the time the scheduler processes it, the
+        request has been handed to the engine (FIFO), and
+        ``engine.cancel`` either drops it from pending or retires its
+        mid-flight row through the deadline-eviction machinery. The
+        request's handle then fails with :class:`Cancelled` (partial Result
+        attached) and its event stream closes -- the same per-request
+        failure shape as a deadline eviction.
+
+        Returns True when ``uid`` was in flight at call time; False is a
+        no-op (already finished, shed, or never submitted -- any
+        already-delivered Result stands). Cancellation that loses the race
+        with the request's own completion is also a no-op: the sample wins.
+        """
+        with self._lock:
+            live = uid in self._streams
+        if live:
+            self._inbox.put((_CANCEL, uid))
+            self.start()
+        return live
+
     def stats(self) -> dict:
         """Scheduler counters (safe snapshot; values may lag one tick).
 
@@ -297,7 +323,10 @@ class ServeDriver:
                 "submitted": int(self._m_submitted.value),
                 "shed": int(self._m_shed.value),
                 "completed": int(eng._m_completed.value),
-                "deadline_evicted": int(eng._m_evicted.value)}
+                "deadline_evicted": int(eng._m_evicted.value),
+                "cancelled": int(eng._m_cancelled.value),
+                "early_exit": int(eng._m_early.value),
+                "saved_nfe": int(eng._m_saved_nfe.value)}
 
     # ------------------------------------------------------------ scheduler
     def _drain_inbox(self, block: bool) -> None:
@@ -313,6 +342,12 @@ class ServeDriver:
             except queue.Empty:
                 break
         for req, stream in batch:
+            if req is _CANCEL:
+                # stream here is the uid; engine emits the cancelled Result
+                # at the next tick (False = already finished: no-op, the
+                # delivered Result stands)
+                self.engine.cancel(stream)
+                continue
             try:
                 self.engine.submit(req)
             except Exception as e:  # per-request failure, not batch-fatal
@@ -338,9 +373,11 @@ class ServeDriver:
             tok = event.tokens[i] if event.tokens is not None else None
             if tok is not None and event.row_seq_lens:
                 tok = tok[:event.row_seq_lens[i]]
+            err = (event.row_err[i],) if event.row_err is not None else None
             stream._push(dataclasses.replace(
                 event, uids=(uid,), k=min(row_k, row_n), n_steps=row_n,
-                tokens=tok, row_steps=None, row_k=None, row_seq_lens=None))
+                tokens=tok, row_steps=None, row_k=None, row_seq_lens=None,
+                row_err=err))
 
     def _crash(self, exc: BaseException) -> None:
         """A tick blew up: the engine's in-flight state is unreliable, so
@@ -379,7 +416,13 @@ class ServeDriver:
                         stream = self._streams.pop(res.uid, None)
                     if stream is None:
                         continue
-                    if res.deadline_exceeded:
+                    if res.cancelled:
+                        exc = Cancelled(
+                            f"request uid {res.uid} cancelled after "
+                            f"{res.latency_s:.3f}s of solve time")
+                        exc.result = res
+                        stream._fail(exc)
+                    elif res.deadline_exceeded:
                         # Deadline eviction is a per-request outcome, never a
                         # driver crash: the engine recycled the row and this
                         # request's own future carries the error (with the

@@ -101,6 +101,7 @@ import numpy as np
 from ..configs.base import ModelConfig
 from ..core import get_timesteps, make_plan
 from ..core import sampler as SAMPLER
+from ..core.adaptive import RetirePolicy
 from ..core.plan import (SolverPlan, inert_row, join_rows, pad_plan,
                          solver_stages, stack_plans, take_rows)
 from ..core.sde import SDE, VPSDE
@@ -120,6 +121,17 @@ class DeadlineExceeded(RuntimeError):
     time spent so far). The driver converts that flag into THIS exception
     on the request's own stream -- the scheduler thread never raises it, so
     a deadline storm can degrade individual requests but never the service.
+    """
+
+
+class Cancelled(RuntimeError):
+    """A request was cancelled (``engine.cancel`` / ``driver.cancel``).
+
+    The engine retires the row through the same boundary machinery as a
+    deadline eviction (the freed slot is recycled via join/compaction) and
+    emits a :class:`Result` flagged ``cancelled=True`` (empty tokens, the
+    solve time burned so far). The driver converts that flag into THIS
+    exception on the request's own stream.
     """
 
 
@@ -167,6 +179,14 @@ class Result:
                                      # tokens is empty, nfe is 0 (no sample
                                      # was produced), latency_s is the solve
                                      # time burned before eviction
+    cancelled: bool = False     # retired by cancel(): tokens empty, nfe 0
+    early_exit: bool = False    # retired early by the engine's RetirePolicy:
+                                # tokens IS a converged sample; nfe is the
+                                # evals actually spent (< the request's
+                                # budget; the difference is the saved NFEs)
+    final_err: float | None = None  # last local-error estimate of the row
+                                    # (None when its plan carries no
+                                    # embedded pair or no estimate exists)
 
 
 @dataclasses.dataclass
@@ -193,6 +213,11 @@ class StepEvent:
                                          # (aligned with uids)
     row_seq_lens: Optional[tuple] = None  # per-request TRUE seq_lens (for
                                           # slicing bucketed decodes)
+    row_err: Optional[tuple] = None  # per-request local-error estimates
+                                     # (aligned with uids; None unless the
+                                     # group's plans carry embedded pairs --
+                                     # entries are +inf until a row's first
+                                     # genuine estimate)
 
 
 class ARServeEngine:
@@ -244,6 +269,23 @@ class ARServeEngine:
             results.append(Result(req.uid, np.asarray(out_tokens),
                                   time.perf_counter() - t0))
         return results
+
+
+# err histogram edges: local-error estimates are small dimensionless
+# magnitudes (x-space Linf), nothing like the registry's latency defaults
+_ERR_EDGES = (1e-8, 1e-7, 1e-6, 1e-5, 1e-4, 1e-3, 1e-2, 1e-1, 1.0)
+
+
+def _spent_nfe(method: str, row: "_Row", k_own: int) -> int:
+    """Network evals a row has actually spent after ``k_own`` of its OWN
+    steps (early exit charges what was used, not the budget). Mirrors the
+    grid sizing above: rk pays its stage count per step, pndm pays 3 extra
+    evals on each of its 3 warmup steps, everything else is 1:1."""
+    if method == "rk":
+        return k_own * max(1, row.nfe // max(1, row.n_steps))
+    if method == "pndm":
+        return k_own + 3 * min(k_own, 3)
+    return k_own
 
 
 # The request's NFE *budget* is honored by sizing the grid as
@@ -339,6 +381,7 @@ class DiffusionServeEngine:
                  compaction: bool = True, join: bool = True,
                  seq_len_buckets=None, mesh=None,
                  enforce_deadlines: bool = False,
+                 retire: RetirePolicy | None = None,
                  metrics: MetricsRegistry | None = None,
                  tracer: Tracer | None = None):
         """``steps_per_tick``: groups advanced per tick (None = all active,
@@ -380,6 +423,22 @@ class DiffusionServeEngine:
         counted in ``serve_deadline_evicted_total``. Off by default --
         deadlines then only order the queue (the pre-enforcement behavior),
         so latency-budget hints can never change what a request returns.
+
+        ``retire``: a :class:`~repro.core.adaptive.RetirePolicy` enables
+        adaptive early exit. Every plan is built with
+        ``error_estimate=True`` (families with an embedded lower-order pair
+        maintain a per-row local-error estimate in ``SamplerState.err`` at
+        zero extra NFE; the rest never retire early), and the boundary pass
+        retires converged rows -- estimate within the policy's tolerance
+        after at least ``min_k`` own steps -- through the SAME ``take_rows``
+        path as deadline eviction, emitting a Result flagged
+        ``early_exit=True`` with the evals actually spent. The decision is a
+        pure per-row function of the row's own (estimate, step count,
+        magnitude), so the bitwise-reproducibility invariant holds in
+        controller form: a solo solve under the IDENTICAL policy retires at
+        the identical step with the identical sample. Under load, saved
+        NFEs are throughput -- a row finishing at k=7 instead of 10 frees a
+        slot a joiner fills the same boundary.
 
         ``metrics``: a :class:`~repro.obs.metrics.MetricsRegistry` to
         register the engine's counters/gauges/histograms in (share one per
@@ -448,7 +507,11 @@ class DiffusionServeEngine:
         self._active: list[_Group] = []
         self._arrivals = 0          # admission sequence counter
         self.enforce_deadlines = enforce_deadlines
-        self._evicted_results: list[Result] = []
+        self.retire = retire
+        # Results produced OUTSIDE a group step (deadline evictions,
+        # cancellations, early exits) -- drained into the next tick's
+        # finished list
+        self._boundary_results: list[Result] = []
 
         # ---- observability: every scheduler metric lives in the registry;
         # the legacy int counters (ticks/wasted_row_steps/joined_requests)
@@ -490,8 +553,19 @@ class DiffusionServeEngine:
         self._g_occupancy = reg.gauge(
             "serve_group_occupancy",
             "live request rows / stacked row slots across active groups")
+        self._m_cancelled = reg.counter(
+            "serve_cancelled_total", "requests retired by cancel()")
+        self._m_early = reg.counter(
+            "serve_early_exit_total",
+            "requests retired early by the RetirePolicy (converged rows)")
+        self._m_saved_nfe = reg.counter(
+            "serve_saved_nfe_total",
+            "network evals saved by early exit (budgeted minus spent)")
         self._h_queue_wait = reg.histogram(
             "serve_queue_wait_seconds", "submit -> admission (join or fresh)")
+        self._h_row_err = reg.histogram(
+            "serve_row_err", "local-error estimate at row retirement",
+            edges=_ERR_EDGES)
         self._h_solve = reg.histogram(
             "serve_solve_seconds",
             "per-request group solve time since its own admission")
@@ -543,6 +617,10 @@ class DiffusionServeEngine:
                 n_grid = max(1, nfe // solver_stages(solver))
             ts = get_timesteps(self.sde, n_grid, self.schedule)
             kw = {"eta": eta} if solver == "ddim_eta" else {}
+            if self.retire is not None:
+                # uniform request across mixed traffic: families without an
+                # embedded pair ignore it (their flag stays False)
+                kw["error_estimate"] = True
             self._plans[key_] = make_plan(solver, self.sde, ts, **kw)
         return self._plans[key_]
 
@@ -662,7 +740,7 @@ class DiffusionServeEngine:
             if self._abs_deadline(p.req, p.t_sub) < now:
                 self._m_evicted.inc()
                 self._h_queue_wait.observe(now - p.t_sub)
-                self._evicted_results.append(Result(
+                self._boundary_results.append(Result(
                     p.req.uid, empty, 0.0, nfe=0,
                     queue_wait_s=now - p.t_sub, deadline_exceeded=True))
             else:
@@ -675,10 +753,103 @@ class DiffusionServeEngine:
                 r.done = True
                 self._m_evicted.inc()
                 self._h_queue_wait.observe(r.wait_s)
-                self._evicted_results.append(Result(
+                self._boundary_results.append(Result(
                     r.req.uid, empty, g.solve_s - r.solve_s0, nfe=0,
                     compile_s=g.compile_s, queue_wait_s=r.wait_s,
                     deadline_exceeded=True))
+            if not any(not r.done for r in g.rows):
+                self._active.remove(g)
+
+    def cancel(self, uid: int) -> bool:
+        """Cancel request ``uid``: drop it from the pending queue, or retire
+        its mid-flight row through the deadline-eviction machinery (the slot
+        recycles via join/compaction at the next boundary). Emits a Result
+        flagged ``cancelled=True`` (drained by the next tick; ``busy`` stays
+        True until then so a driver loop always delivers it). Returns False
+        when ``uid`` is unknown -- already finished, already evicted, or
+        never submitted -- and cancellation is a no-op (the original Result
+        stands). Runs on the scheduler thread (the driver routes cancels
+        through its inbox)."""
+        empty = np.zeros(0, np.int32)
+        now = time.perf_counter()
+        for p in list(self._pending):
+            if p.req.uid == uid:
+                self._pending.remove(p)
+                self._g_queue.set(len(self._pending))
+                self._m_cancelled.inc()
+                self._h_queue_wait.observe(now - p.t_sub)
+                self._boundary_results.append(Result(
+                    uid, empty, 0.0, nfe=0, queue_wait_s=now - p.t_sub,
+                    cancelled=True))
+                return True
+        for g in list(self._active):
+            for r in g.rows:
+                if r.pad or r.done or r.req.uid != uid:
+                    continue
+                r.done = True
+                self._m_cancelled.inc()
+                self._h_queue_wait.observe(r.wait_s)
+                self._boundary_results.append(Result(
+                    uid, empty, g.solve_s - r.solve_s0, nfe=0,
+                    compile_s=g.compile_s, queue_wait_s=r.wait_s,
+                    cancelled=True))
+                if not any(not row.done for row in g.rows):
+                    self._active.remove(g)
+                return True
+        return False
+
+    def _retire_converged(self) -> None:
+        """Early-exit pass (``retire`` policy set): retire rows whose local
+        error estimate has converged, BEFORE the boundary pass rebuilds
+        groups -- a freed slot is a join slot the very same tick.
+
+        A row is eligible once it has taken ``min_k`` of its OWN steps and
+        before its natural horizon; convergence is the policy's pure per-row
+        decision over ``(err, |x|_inf)`` -- rows whose plans carry no
+        embedded pair report err=+inf and never pass. Retired rows emit a
+        full Result (their iterate IS the converged sample, decoded and
+        masked to the true seq_len) flagged ``early_exit=True`` with
+        ``nfe`` = evals actually spent; the saved difference feeds
+        ``serve_saved_nfe_total``. Groups whose plans carry no estimates are
+        skipped without touching the device."""
+        pol = self.retire
+        for g in list(self._active):
+            if not g.plan.error_estimate:
+                continue
+            cand = [i for i, r in enumerate(g.rows)
+                    if not r.done and not r.pad
+                    and pol.min_k <= g.k - r.k0 < r.n_steps]
+            if not cand:
+                continue
+            err = np.asarray(jax.device_get(g.state.err), np.float64)
+            if pol.norm == "rel":
+                x = g.state.x
+                x_inf = np.asarray(jnp.max(
+                    jnp.abs(x), axis=tuple(range(1, x.ndim))), np.float64)
+            else:
+                x_inf = np.zeros(len(g.rows))
+            mask = pol.converged(err[cand], x_inf[cand])
+            hit = [i for i, m in zip(cand, mask) if m]
+            if not hit:
+                continue
+            toks = np.asarray(DLM.decode_tokens(
+                self._params_exec, self.cfg, g.state.x[jnp.asarray(hit)]))
+            for j, i in enumerate(hit):
+                r = g.rows[i]
+                r.done = True
+                k_own = g.k - r.k0
+                spent = _spent_nfe(g.plan.method, r, k_own)
+                self._m_completed.inc()
+                self._m_early.inc()
+                self._m_saved_nfe.inc(max(0, r.nfe - spent))
+                self._h_row_err.observe(float(err[i]))
+                self._h_queue_wait.observe(r.wait_s)
+                lat = g.solve_s - r.solve_s0
+                self._h_solve.observe(lat)
+                self._boundary_results.append(Result(
+                    r.req.uid, toks[j][:r.req.seq_len], lat, nfe=spent,
+                    compile_s=g.compile_s, queue_wait_s=r.wait_s,
+                    early_exit=True, final_err=float(err[i])))
             if not any(not r.done for r in g.rows):
                 self._active.remove(g)
 
@@ -719,6 +890,8 @@ class DiffusionServeEngine:
         now = time.perf_counter()
         if self.enforce_deadlines:
             self._evict_expired(now)
+        if self.retire is not None:
+            self._retire_converged()
         buckets: dict = {}
         while self._pending:
             p = self._pending.popleft()
@@ -937,8 +1110,9 @@ class DiffusionServeEngine:
 
     @property
     def busy(self) -> bool:
-        """True while any request is pending admission or mid-solve."""
-        return bool(self._pending or self._active)
+        """True while any request is pending admission or mid-solve, or a
+        boundary Result (eviction/cancellation/early exit) awaits drain."""
+        return bool(self._pending or self._active or self._boundary_results)
 
     def reset(self) -> None:
         """Abort all pending and in-flight work (queues cleared; the plan and
@@ -947,7 +1121,7 @@ class DiffusionServeEngine:
         the driver calls it before failing the affected requests' futures."""
         self._pending.clear()
         self._active.clear()
-        self._evicted_results.clear()
+        self._boundary_results.clear()
         self._g_queue.set(0)
         self._g_groups.set(0)
         self._g_occupancy.set(0.0)
@@ -982,9 +1156,9 @@ class DiffusionServeEngine:
             self._admit()
         self._m_ticks.inc()
         finished: list[Result] = []
-        if self._evicted_results:          # deadline enforcement this tick
-            finished += self._evicted_results
-            self._evicted_results = []
+        if self._boundary_results:          # deadline enforcement this tick
+            finished += self._boundary_results
+            self._boundary_results = []
         stepped, skipped = self._select()
         for g in skipped:
             g.skipped += 1
@@ -1020,6 +1194,12 @@ class DiffusionServeEngine:
             if on_step is not None and stream_decode:
                 stream_toks = np.asarray(DLM.decode_tokens(
                     self._params_exec, self.cfg, g.state.x))
+            # one host pull of the per-row error estimates serves both the
+            # step event and natural-finish final_err (plans without
+            # embedded pairs skip the transfer entirely)
+            err_v = None
+            if g.plan.error_estimate and (on_step is not None or newly):
+                err_v = np.asarray(jax.device_get(g.state.err), np.float64)
             if on_step is not None:
                 real = g.real_idx
                 on_step(StepEvent(
@@ -1028,7 +1208,9 @@ class DiffusionServeEngine:
                     else None,
                     row_steps=tuple(g.rows[i].n_steps for i in real),
                     row_k=tuple(g.k - g.rows[i].k0 for i in real),
-                    row_seq_lens=tuple(g.rows[i].req.seq_len for i in real)))
+                    row_seq_lens=tuple(g.rows[i].req.seq_len for i in real),
+                    row_err=tuple(float(err_v[i]) for i in real)
+                    if err_v is not None else None))
             if newly:
                 # decode ONLY the finished rows unless a full partial decode
                 # already exists (ragged groups would otherwise pay one
@@ -1041,11 +1223,17 @@ class DiffusionServeEngine:
                     row = g.rows[i]
                     row.done = True
                     # bucketed admission: mask the solve's tail positions
-                    # back to the request's true seq_len
+                    # back to the request's true seq_len. final_err is None
+                    # (not +inf) when no estimate exists: Results serialize
+                    # to strict JSON, which has no Infinity literal.
+                    f_err = None
+                    if err_v is not None and math.isfinite(err_v[i]):
+                        f_err = float(err_v[i])
                     res = Result(
                         row.req.uid, new_toks[j][:row.req.seq_len],
                         g.solve_s - row.solve_s0, nfe=row.nfe,
-                        compile_s=g.compile_s, queue_wait_s=row.wait_s)
+                        compile_s=g.compile_s, queue_wait_s=row.wait_s,
+                        final_err=f_err)
                     self._m_completed.inc()
                     self._h_queue_wait.observe(res.queue_wait_s)
                     self._h_solve.observe(res.latency_s)

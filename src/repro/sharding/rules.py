@@ -226,9 +226,10 @@ def state_specs(state, mesh: Mesh):
 
     The request axis is sharded over the data-like mesh axes: ``x`` is
     ``(R, *inner)`` (axis 0), ``hist`` is ``(history_len, R, *inner)``
-    (axis 1), the per-request key stack is ``(R, 2)`` (axis 0), and the step
-    counter ``k`` is replicated. Non-divisible (or unstacked, ``key.ndim !=
-    2``) states fall back to replication leaf-wise.
+    (axis 1), the per-request key stack is ``(R, 2)`` (axis 0), the per-row
+    error estimate ``err`` is ``(R,)`` (axis 0), and the step counter ``k``
+    is replicated. Non-divisible (or unstacked, ``key.ndim != 2``) states
+    fall back to replication leaf-wise.
     """
     from ..core.sampler import SamplerState  # local: avoid core<->sharding cycle
     stacked = state.key.ndim == 2
@@ -236,4 +237,5 @@ def state_specs(state, mesh: Mesh):
         x=_leading_axis_spec(state.x, mesh, 0) if stacked else P(),
         hist=_leading_axis_spec(state.hist, mesh, 1) if stacked else P(),
         key=_leading_axis_spec(state.key, mesh, 0) if stacked else P(),
-        k=P())
+        k=P(),
+        err=_leading_axis_spec(state.err, mesh, 0) if stacked else P())

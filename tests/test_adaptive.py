@@ -1,0 +1,197 @@
+"""Unit coverage for ``repro.core.adaptive``: the shared error-control
+primitives (:func:`error_ratio` / :func:`step_factor`), the serving-side
+:class:`RetirePolicy`, and the :class:`AdaptiveRK23` controller's
+accept/reject accounting -- plus the ``SamplerState.err`` estimate semantics
+both policies consume (inf-until-first-estimate, zero NFE overhead, and the
+non-perturbation invariant early-exit serving rests on)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (VPSDE, get_timesteps, init_state, make_plan, step)
+from repro.core.adaptive import (AdaptiveRK23, RetirePolicy, error_ratio,
+                                 step_factor)
+
+
+# ------------------------------------------------------------- error_ratio
+def test_error_ratio_exact_value():
+    y_hi = jnp.array([1.0, 2.0])
+    y_lo = jnp.array([1.0, 1.5])
+    y_prev = jnp.array([0.5, 1.0])
+    # elementwise: |diff| / (atol + rtol*max(|y_hi|,|y_prev|)), take the max
+    want = 0.5 / (0.1 + 0.1 * 2.0)
+    got = error_ratio(y_hi, y_lo, y_prev, atol=0.1, rtol=0.1)
+    assert got == pytest.approx(want)
+
+
+def test_error_ratio_properties_seeded():
+    rng = np.random.RandomState(0)
+    for _ in range(25):
+        y_hi = jnp.asarray(rng.randn(8))
+        y_lo = jnp.asarray(rng.randn(8))
+        y_prev = jnp.asarray(rng.randn(8))
+        atol, rtol = 10 ** rng.uniform(-6, -1), 10 ** rng.uniform(-6, -1)
+        r = error_ratio(y_hi, y_lo, y_prev, atol, rtol)
+        assert r >= 0.0
+        # identical pair is always acceptable at any tolerance
+        assert error_ratio(y_hi, y_hi, y_prev, atol, rtol) == 0.0
+        # tightening BOTH tolerances by 10x scales the ratio by >= ~10x
+        # (>= because the scale is atol + rtol*mag, not a pure product)
+        r10 = error_ratio(y_hi, y_lo, y_prev, atol / 10, rtol / 10)
+        assert r10 == pytest.approx(10 * r, rel=1e-9)
+
+
+# ------------------------------------------------------------- step_factor
+def test_step_factor_shape():
+    assert step_factor(1.0) == pytest.approx(0.9)       # on the boundary
+    assert step_factor(0.0) == 5.0                      # max growth, clipped
+    assert step_factor(1e12) == 0.2                     # max shrink, clipped
+    # third-order rescale inside the clip band
+    assert step_factor(0.5) == pytest.approx(0.9 * 0.5 ** (-1 / 3))
+
+
+def test_step_factor_monotone_and_contracts_on_reject():
+    errs = 10.0 ** np.linspace(-6, 4, 40)
+    fac = [step_factor(e) for e in errs]
+    assert all(a >= b for a, b in zip(fac, fac[1:]))    # non-increasing
+    for e in errs:
+        if e > 1.0:          # rejected step MUST shrink
+            assert step_factor(e) < 1.0
+        assert 0.2 <= step_factor(e) <= 5.0
+
+
+# ------------------------------------------------------------ RetirePolicy
+def test_retire_policy_validation():
+    with pytest.raises(ValueError):
+        RetirePolicy(tol=0.0)
+    with pytest.raises(ValueError):
+        RetirePolicy(tol=-1e-3)
+    with pytest.raises(ValueError):
+        RetirePolicy(tol=1e-3, min_k=0)
+    with pytest.raises(ValueError):
+        RetirePolicy(tol=1e-3, norm="l2")
+    with pytest.raises(ValueError):
+        RetirePolicy(tol=1e-3, norm="rel").converged(np.array([0.0]))
+
+
+def test_retire_policy_converged_abs_rel_and_inf():
+    err = np.array([1e-5, 1e-2, np.inf, np.nan])
+    pol = RetirePolicy(tol=1e-3)
+    # inf (no estimate yet) and nan never converge, whatever the tol
+    np.testing.assert_array_equal(pol.converged(err),
+                                  [True, False, False, False])
+    np.testing.assert_array_equal(
+        RetirePolicy(tol=1e9).converged(err), [True, True, False, False])
+    # rel: bound scales with each row's own magnitude
+    rel = RetirePolicy(tol=1e-3, norm="rel")
+    x_inf = np.array([1.0, 100.0, 1.0, 1.0])
+    np.testing.assert_array_equal(rel.converged(err, x_inf),
+                                  [True, True, False, False])
+    # degenerate zero-magnitude rows fall back to a floor, not a zero bound
+    assert rel.converged(np.array([0.0]), np.array([0.0]))[0]
+
+
+# ----------------------------------------- AdaptiveRK23 controller accounting
+@pytest.fixture(scope="module")
+def sde():
+    return VPSDE()
+
+
+def test_adaptive_rk23_nfe_accounting(sde):
+    """Every attempt (accepted OR rejected) costs exactly 3 evals on top of
+    the initial FSAL seed -- the accounting the paper's App. B Q2 argument
+    (rejections waste NFE) depends on."""
+    def eps(x, t):
+        return jnp.tanh(x) * jnp.cos(t)
+
+    x_T = jax.random.normal(jax.random.PRNGKey(0), (2, 8))
+    res = AdaptiveRK23(sde, rtol=1e-3, atol=1e-3).solve(eps, x_T)
+    assert res.nfe == 1 + 3 * (res.n_accepted + res.n_rejected)
+    assert res.n_accepted >= 1
+    assert int(res.state.k) == res.n_accepted
+    assert res.x0.shape == x_T.shape
+    # the solve left a genuine last-pair estimate behind
+    assert np.isfinite(float(res.state.err))
+
+
+def test_adaptive_rk23_exact_rhs_never_rejects(sde):
+    """eps == 0 makes the rho-ODE trivial (y' = 0): the embedded pair agrees
+    exactly, so the controller must accept every step at max growth and
+    return x0 = mu(t0)/mu(T) * x_T unchanged."""
+    x_T = jnp.ones((4,)) * 0.7
+    res = AdaptiveRK23(sde, rtol=1e-6, atol=1e-6).solve(
+        lambda x, t: jnp.zeros_like(x), x_T)
+    assert res.n_rejected == 0
+    scale = float(sde.mu(sde.t0)) / float(sde.mu(sde.T))
+    np.testing.assert_allclose(np.asarray(res.x0), scale * np.asarray(x_T),
+                               rtol=1e-12)
+    assert float(res.state.err) == 0.0
+
+
+def test_adaptive_rk23_tighter_tol_more_steps(sde):
+    def eps(x, t):
+        return jnp.sin(3 * x) * jnp.exp(-t)
+
+    x_T = jax.random.normal(jax.random.PRNGKey(1), (8,))
+    loose = AdaptiveRK23(sde, rtol=1e-1, atol=1e-1).solve(eps, x_T)
+    tight = AdaptiveRK23(sde, rtol=1e-4, atol=1e-4).solve(eps, x_T)
+    assert tight.n_accepted > loose.n_accepted
+    assert tight.nfe > loose.nfe
+
+
+# --------------------------------- SamplerState.err estimate semantics (the
+# machinery RetirePolicy consumes through the serving engine)
+def _eps(x, t):
+    t = jnp.reshape(t, jnp.shape(t) + (1,) * (x.ndim - jnp.ndim(t)))
+    return jnp.sin(x) * 0.1 + 0.01 * t
+
+
+@pytest.mark.parametrize("solver", ["tab2", "tab3", "ipndm3", "rho_heun",
+                                    "dpm2", "pndm"])
+def test_err_estimate_never_perturbs_iterate(sde, solver):
+    """error_estimate=True must be free: bitwise-identical x trajectory and
+    zero extra NFE vs the same plan without estimates (early-exit serving
+    builds every plan with estimates on; a perturbation here would break
+    bitwise-vs-solo against estimate-off engines AND the paper's tables)."""
+    ts = get_timesteps(sde, 8, "uniform")
+    base = make_plan(solver, sde, ts)
+    est = make_plan(solver, sde, ts, error_estimate=True)
+    assert base.nfe == est.nfe
+    assert not base.error_estimate and est.error_estimate
+    assert base.signature != est.signature       # distinct trace identities
+    x_T = jax.random.normal(jax.random.PRNGKey(2), (2, 6))
+    s0, s1 = init_state(base, x_T), init_state(est, x_T)
+    for k in range(base.n_steps):
+        s0 = step(base, k, s0, _eps)
+        s1 = step(est, k, s1, _eps)
+    np.testing.assert_array_equal(np.asarray(s0.x), np.asarray(s1.x))
+
+
+@pytest.mark.parametrize("solver,first_k", [("tab3", 4), ("rho_heun", 1),
+                                            ("pndm", 4)])
+def test_err_inf_until_first_genuine_estimate(sde, solver, first_k):
+    """err is +inf at init and through warmup (both embedded orders coincide
+    there: no information), then finite from the first genuine pair --
+    exactly the rows RetirePolicy.converged refuses to retire."""
+    ts = get_timesteps(sde, 8, "uniform")
+    plan = make_plan(solver, sde, ts, error_estimate=True)
+    st = init_state(plan, jax.random.normal(jax.random.PRNGKey(3), (2, 6)))
+    assert np.isinf(float(st.err))
+    for k in range(plan.n_steps):
+        st = step(plan, k, st, _eps)
+        if k + 1 < first_k:
+            assert np.isinf(float(st.err)), (solver, k)
+        else:
+            assert np.isfinite(float(st.err)) and float(st.err) > 0.0
+
+
+def test_err_without_estimate_flag_stays_inf(sde):
+    ts = get_timesteps(sde, 6, "uniform")
+    plan = make_plan("tab2", sde, ts)          # default: no embedded pair
+    st = init_state(plan, jnp.ones((2, 4)))
+    for k in range(plan.n_steps):
+        st = step(plan, k, st, _eps)
+    assert np.isinf(float(st.err))
+    # ... and RetirePolicy can therefore never fire on it
+    assert not RetirePolicy(tol=1e30).converged(np.asarray(st.err)).any()

@@ -6,9 +6,15 @@ budgets, seq_lens and solver names -- are driven through
 an 8-device host mesh), asserting the three invariants the scheduler is
 contractually not allowed to trade away:
 
-* **bitwise-vs-solo**: every Result equals the same request served alone on
-  an identically-configured engine -- scheduling (grouping, joining,
-  compaction, priorities, timing) never changes WHAT a request computes;
+* **bitwise-vs-solo (same controller)**: every Result equals the same
+  request served alone on an identically-configured engine -- scheduling
+  (grouping, joining, compaction, priorities, timing) never changes WHAT a
+  request computes. "Identically configured" includes the early-exit
+  controller: an engine with a RetirePolicy is compared against a solo
+  engine under the SAME policy, and must retire each row at the identical
+  own-step with the identical sample and NFE (the retire decision is a pure
+  per-row function of the row's own error estimate, and the estimate's Linf
+  reduction is batch-composition independent);
 * **zero warm recompiles**: replaying the workload on the warm engine adds
   no executors and charges no compile time (the fixed-executor-set
   contract continuous admission exists to protect);
@@ -140,6 +146,189 @@ def test_fuzz_joins_admit_into_inflight_groups(diff_setup):
     got = _drive(eng, workload)
     assert len(got) == 10
     assert eng.joined_requests > 0
+
+
+# ----------------------------------- early-exit serving (controller fuzz)
+_EE_POLICY = dict(tol=1.0, min_k=2)   # loose: reduced-config estimates sit
+                                      # well under 1.0 a step or two in
+
+
+@pytest.fixture(scope="module")
+def solo_engine_ee(diff_setup):
+    """Solo reference under the SAME RetirePolicy as the fuzzed engines --
+    the early-exit bitwise invariant is vs-solo-with-same-controller."""
+    from repro.core.adaptive import RetirePolicy
+    params, cfg = diff_setup
+    return DiffusionServeEngine(params, cfg, seq_len_buckets=(8,),
+                                retire=RetirePolicy(**_EE_POLICY))
+
+
+@pytest.mark.parametrize("join", [True, False], ids=["joins_on", "joins_off"])
+@pytest.mark.parametrize("fuzz_seed", [0, 1])
+def test_fuzz_early_exit_bitwise_vs_solo_same_controller(diff_setup,
+                                                         solo_engine_ee,
+                                                         join, fuzz_seed):
+    """Early-exit fuzz: under a shared RetirePolicy, grouping/joining/
+    compaction never change WHEN a row retires or WHAT it returns -- every
+    Result (early-exit or natural) is bitwise the solo engine's, with the
+    same nfe and early_exit flag; saved NFEs are conserved into the
+    registry; and the estimate-carrying executors stay warm-cache closed."""
+    from repro.core.adaptive import RetirePolicy
+    params, cfg = diff_setup
+    # guarantee embedded-pair traffic: the random mix plus a tab2 burst
+    workload = _gen_workload(fuzz_seed, n=8)
+    workload += [(i, Request(uid=100 + i, seq_len=8, nfe=6 + i % 3,
+                             solver="tab2", seed=i)) for i in range(4)]
+    eng = DiffusionServeEngine(params, cfg, steps_per_tick=2, aging_ticks=3,
+                               max_group=3, join=join, seq_len_buckets=(8,),
+                               retire=RetirePolicy(**_EE_POLICY))
+    got = _drive(eng, workload)
+    assert len(got) == len(workload)
+    assert eng.wasted_row_steps == 0
+
+    m = eng.metrics
+    n_early = sum(r.early_exit for r in got.values())
+    assert n_early > 0                            # the dimension is exercised
+    assert m.get("serve_early_exit_total").value == n_early
+    # early exits COMPLETE (conservation: they deliver a sample)
+    assert m.get("serve_completed_total").value == len(workload)
+    saved = m.get("serve_saved_nfe_total").value
+    assert saved == sum(
+        req.nfe - got[req.uid].nfe for _, req in workload
+        if got[req.uid].early_exit)
+    assert saved > 0
+
+    for _, req in workload:
+        res = got[req.uid]
+        solo = solo_engine_ee.serve([Request(
+            uid=req.uid, seq_len=req.seq_len, nfe=req.nfe, solver=req.solver,
+            eta=req.eta, seed=req.seed)])[0]
+        np.testing.assert_array_equal(solo.tokens, res.tokens)
+        assert (solo.early_exit, solo.nfe) == (res.early_exit, res.nfe)
+        # final_err is only ULP-stable across DIFFERENT executables (solo is
+        # batch-1, the fuzz group batch-N: the E-combination fuses
+        # differently per executable while tokens/nfe/exit-step stay exact)
+        if solo.final_err is None or res.final_err is None:
+            assert solo.final_err == res.final_err
+        else:
+            np.testing.assert_allclose(solo.final_err, res.final_err,
+                                       rtol=1e-4)
+        if res.early_exit:
+            assert res.nfe < req.nfe and res.final_err <= _EE_POLICY["tol"]
+        # pair-less solvers must always run their full budget
+        if req.solver in ("ddim", "euler", "em", "ddim_eta"):
+            assert not res.early_exit and res.nfe == req.nfe
+
+    n_exec = eng.num_executors
+    warm = _drive(eng, workload)
+    assert eng.num_executors == n_exec, "warm early-exit replay recompiled"
+    assert all(r.compile_s == 0.0 for r in warm.values())
+    for uid in got:
+        np.testing.assert_array_equal(warm[uid].tokens, got[uid].tokens)
+        assert warm[uid].nfe == got[uid].nfe
+
+
+# ------------------------------------------- cancellation (race-tolerant)
+def _drive_with_cancels(eng, workload, cancels):
+    """_drive plus cancel orders keyed to ticks: {tick: [uid, ...]}.
+    Cancels are best-effort -- a request may legitimately finish first."""
+    pending = sorted(workload, key=lambda a: a[0])
+    i, t, results = 0, 0, []
+    while i < len(pending) or eng.busy:
+        while i < len(pending) and pending[i][0] <= t:
+            eng.submit(pending[i][1])
+            i += 1
+        for uid in cancels.get(t, ()):
+            eng.cancel(uid)
+        results += eng.tick()
+        t += 1
+        assert t < _MAX_TICKS, "scheduler failed to drain (starvation?)"
+    return {r.uid: r for r in results}
+
+
+@pytest.mark.parametrize("fuzz_seed", [0, 1])
+def test_fuzz_cancellation_conservation_and_survivors(diff_setup,
+                                                      solo_engine, fuzz_seed):
+    """Cancellation storms: every request gets exactly one outcome, the
+    registry conserves requests (submitted == completed + cancelled), a
+    cancelled request delivers no sample, and cancellation never perturbs a
+    survivor (bitwise-vs-solo through the same take_rows recycle path as
+    deadline eviction). Cancels of unknown/finished uids are no-ops."""
+    params, cfg = diff_setup
+    rng = np.random.RandomState(100 + fuzz_seed)
+    workload = _gen_workload(fuzz_seed, n=10)
+    # cancel a random third across the drain window; some orders will lose
+    # the race with completion on purpose (no-op then)
+    cancels: dict = {}
+    targets = rng.choice(10, size=4, replace=False)
+    for uid in targets:
+        cancels.setdefault(int(rng.randint(0, 12)), []).append(int(uid))
+    cancels.setdefault(0, []).append(999)         # never submitted: no-op
+    eng = _make_engine(params, cfg, join=True)
+    got = _drive_with_cancels(eng, workload, cancels)
+    assert len(got) == len(workload)              # one outcome per request
+
+    m = eng.metrics
+    submitted = m.get("serve_submitted_total").value
+    completed = m.get("serve_completed_total").value
+    cancelled = m.get("serve_cancelled_total").value
+    assert submitted == len(workload)
+    assert completed + cancelled == submitted     # conservation
+    assert cancelled == sum(r.cancelled for r in got.values())
+    assert eng.cancel(999) is False               # unknown uid: no-op
+
+    for _, req in workload:
+        res = got[req.uid]
+        if res.cancelled:
+            assert req.uid in set(int(u) for us in cancels.values()
+                                  for u in us)
+            assert res.tokens.size == 0 and res.nfe == 0
+        else:
+            solo = solo_engine.serve([Request(
+                uid=req.uid, seq_len=req.seq_len, nfe=req.nfe,
+                solver=req.solver, eta=req.eta, seed=req.seed)])[0]
+            np.testing.assert_array_equal(solo.tokens, res.tokens)
+
+
+def test_driver_cancel_on_own_stream(diff_setup):
+    """Through the driver, a cancelled request fails with Cancelled on ITS
+    OWN handle (stream closed, driver alive), later submissions still
+    compute bitwise-identical samples, and stats() conserves requests."""
+    from repro.serving.driver import ServeDriver
+    from repro.serving.engine import Cancelled
+
+    params, cfg = diff_setup
+    eng = DiffusionServeEngine(params, cfg, seq_len_buckets=(8,))
+    with ServeDriver(eng) as drv:
+        # warm the executor so the cancel below races a real solve window
+        drv.submit(Request(uid=990, seq_len=8, nfe=3, solver="ddim",
+                           seed=0)).result(timeout=120)
+        h1 = drv.submit(Request(uid=1, seq_len=8, nfe=400, solver="ddim",
+                                seed=1))
+        h2 = drv.submit(Request(uid=2, seq_len=8, nfe=3, solver="ddim",
+                                seed=2))
+        assert drv.cancel(1) is True
+        with pytest.raises(Cancelled) as ei:
+            h1.result(timeout=60)
+        assert ei.value.result.cancelled and ei.value.result.tokens.size == 0
+        res2 = h2.result(timeout=60)
+        assert not res2.cancelled and res2.tokens.size > 0
+        assert drv.cancel(1) is False          # already finished: no-op
+        assert drv.cancel(777) is False        # never submitted: no-op
+        # the driver survived and still serves, bitwise-stable
+        late = drv.submit(Request(uid=3, seq_len=8, nfe=3, solver="ddim",
+                                  seed=2))
+        np.testing.assert_array_equal(late.result(timeout=60).tokens,
+                                      res2.tokens)
+        s = drv.stats()
+        assert s["cancelled"] == 1
+    s = drv.stats()
+    assert s["in_flight"] == 0
+    # driver-side conservation: all submissions resolved exactly once
+    assert s["submitted"] == 4
+    m = eng.metrics
+    assert m.get("serve_completed_total").value + \
+        m.get("serve_cancelled_total").value == s["submitted"]
 
 
 # -------------------------------------- deadline enforcement (storm fuzz)
@@ -337,6 +526,99 @@ for uid in want:
     np.testing.assert_array_equal(again[uid].tokens, want[uid].tokens)
 print("FUZZ_MESH_OK joined=%%d" %% eng.joined_requests)
 """
+
+
+_CHILD_FUZZ_EE = """
+import os
+import jax, numpy as np
+assert jax.device_count() == 8, jax.device_count()
+from repro.configs.base import get_config
+from repro.core.adaptive import RetirePolicy
+from repro.models import transformer as T
+from repro.serving.engine import DiffusionServeEngine, Request
+from repro.launch.mesh import make_request_mesh
+
+cfg = get_config("gemma_2b").reduced().with_(objective="diffusion")
+params = T.init_params(cfg, jax.random.PRNGKey(0))
+
+rng = np.random.RandomState(7)
+workload = [(int(rng.randint(0, 5)), Request(
+    uid=i, seq_len=int(rng.randint(5, 9)), nfe=int(rng.choice([5, 7, 9])),
+    solver=["tab2", "ddim", "tab2"][i %% 3],
+    seed=int(rng.randint(100)), priority=int(rng.randint(2))))
+    for i in range(10)]
+
+def drive(eng):
+    pending = sorted(workload, key=lambda a: a[0])
+    i, t, res = 0, 0, []
+    while i < len(pending) or eng.busy:
+        while i < len(pending) and pending[i][0] <= t:
+            eng.submit(pending[i][1]); i += 1
+        res += eng.tick(); t += 1
+        assert t < 2000
+    return {r.uid: r for r in res}
+
+pol = RetirePolicy(tol=1.0, min_k=2)
+base = DiffusionServeEngine(params, cfg, max_group=16, seq_len_buckets=(8,),
+                            retire=pol)
+want = drive(base)
+assert any(r.early_exit for r in want.values())   # dimension exercised
+eng = DiffusionServeEngine(params, cfg, max_group=16, seq_len_buckets=(8,),
+                           mesh=make_request_mesh(), retire=pol)
+got = drive(eng)
+assert want.keys() == got.keys()
+for uid in want:   # sharded early-exit fuzz == single-device early-exit fuzz
+    np.testing.assert_array_equal(got[uid].tokens, want[uid].tokens)
+    assert got[uid].nfe == want[uid].nfe
+    assert got[uid].early_exit == want[uid].early_exit
+    # the estimate's weighted combination is only ULP-stable across the
+    # sharded/unsharded EXECUTABLES (different fusion); decisions matched
+    if want[uid].final_err is not None:
+        np.testing.assert_allclose(got[uid].final_err, want[uid].final_err,
+                                   rtol=1e-4)
+m_b, m_s = base.metrics, eng.metrics
+assert m_s.get("serve_saved_nfe_total").value == \\
+    m_b.get("serve_saved_nfe_total").value
+# bitwise-vs-solo-with-same-controller holds exactly under the SAME mesh:
+# same executable family, same per-row estimate, same retire step
+solo = DiffusionServeEngine(params, cfg, seq_len_buckets=(8,),
+                            mesh=make_request_mesh(), retire=pol)
+for _, req in workload:
+    s = solo.serve([Request(uid=req.uid, seq_len=req.seq_len, nfe=req.nfe,
+                            solver=req.solver, seed=req.seed)])[0]
+    g = got[req.uid]
+    np.testing.assert_array_equal(s.tokens, g.tokens)
+    assert (s.nfe, s.early_exit, s.final_err) == \\
+        (g.nfe, g.early_exit, g.final_err)
+n = eng.num_executors
+again = drive(eng)
+assert eng.num_executors == n, "warm sharded early-exit replay recompiled"
+print("FUZZ_MESH_EE_OK early=%%d" %%
+      int(m_s.get("serve_early_exit_total").value))
+"""
+
+
+@pytest.mark.slow  # compiles sharded estimate-carrying executors
+def test_fuzz_early_exit_sharded_8dev_bitwise():
+    """The early-exit invariants hold UNDER request-axis sharding: an
+    8-device mesh engine with the same RetirePolicy retires the same rows at
+    the same steps with bitwise-identical samples and conserved saved-NFE
+    accounting (the per-row Linf estimate shards over the request axis and
+    is reduction-order independent)."""
+    import os
+    import subprocess
+    import sys
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src")]
+        + env.get("PYTHONPATH", "").split(os.pathsep))
+    out = subprocess.run([sys.executable, "-c", _CHILD_FUZZ_EE % ()],
+                         capture_output=True, text=True, timeout=1800,
+                         env=env)
+    assert out.returncode == 0, f"child failed:\n{out.stdout}\n{out.stderr}"
+    assert "FUZZ_MESH_EE_OK" in out.stdout, out.stdout
 
 
 @pytest.mark.slow  # compiles sharded executors for several batch buckets
