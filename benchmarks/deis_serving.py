@@ -22,7 +22,8 @@ Three measurements on a reduced backbone:
     included, because they land in the same (signature, batch, seq_len)
     executor cache;
   * an EARLY-EXIT run: an engine under a RetirePolicy serves a mixed
-    tab2/ddim workload; estimate-carrying rows retire once their embedded
+    tab2/sndeis2/ddim workload; estimate-carrying rows retire once their
+    embedded
     local-error estimate converges, and the run ratchets the (deterministic)
     early-exit count and saved NFEs at tol 0 -- the serving-side payoff of
     the embedded pairs;
@@ -54,9 +55,11 @@ from repro.serving.engine import DiffusionServeEngine, Request
 def _throughput_rows(eng, quick: bool):
     rows = []
     n_req = 4 if quick else 8
-    for solver, nfe in ([("tab3", 5), ("tab3", 10)] if quick else
+    for solver, nfe in ([("tab3", 5), ("tab3", 10), ("dpm3m", 10),
+                         ("sndeis2", 10)] if quick else
                         [("ddim", 10), ("tab3", 5), ("tab3", 10), ("tab3", 20),
-                         ("rho_heun", 5)]):
+                         ("rho_heun", 5), ("dpm3m", 10), ("seeds2", 10),
+                         ("scire2", 10), ("sndeis2", 10)]):
         reqs = [Request(uid=i, seq_len=32, nfe=nfe, solver=solver, seed=i)
                 for i in range(n_req)]
         eng.serve(reqs)  # warm/compile
@@ -83,6 +86,9 @@ def _mixed_traffic_row(eng, quick: bool):
         [Request(uid=300, seq_len=16, nfe=6, solver="em", seed=7),
          Request(uid=301, seq_len=16, nfe=6, solver="ddim_eta", eta=1.0,
                  seed=8)],
+        # one request per next-gen family, all in one wave
+        [Request(uid=500 + i, seq_len=32, nfe=6, solver=s, seed=20 + i)
+         for i, s in enumerate(["dpm2m", "seeds1", "scire2", "sndeis2"])],
     ]
     if not quick:
         waves.append([Request(uid=400 + i, seq_len=32, nfe=8, solver="rho_heun",
@@ -293,15 +299,17 @@ def _early_exit_rows(params, cfg, quick: bool):
     """Adaptive early-exit serving: an engine with a RetirePolicy retires
     rows whose embedded local-error estimate has converged, spending fewer
     NFEs than the request budgeted. The workload mixes estimate-carrying
-    tab2 requests with pair-less ddim ones (which must always run their
-    full budget). Early-exit counts and saved NFEs are deterministic
+    tab2 and sndeis2 (score-normalized pair, ``E * nu``) requests with
+    pair-less ddim ones (which must always run their full budget).
+    Early-exit counts and saved NFEs are deterministic
     functions of the seeded workload and the policy (the retire decision is
     per-row and timing-independent), so they ratchet at tol 0."""
     from repro.core.adaptive import RetirePolicy
 
     n = 6 if quick else 12
     reqs = [Request(uid=i, seq_len=32, nfe=[6, 9, 12][i % 3],
-                    solver="ddim" if i % 4 == 3 else "tab2", seed=i)
+                    solver=("ddim" if i % 4 == 3 else
+                            "sndeis2" if i % 4 == 1 else "tab2"), seed=i)
             for i in range(n)]
     eng = DiffusionServeEngine(params, cfg, steps_per_tick=2, max_group=4,
                                retire=RetirePolicy(tol=1.0, min_k=2))
@@ -325,6 +333,8 @@ def _early_exit_rows(params, cfg, quick: bool):
     assert early == sum(r.early_exit for r in results) > 0
     assert saved == sum(budget[u] - by[u].nfe for u in by
                         if by[u].early_exit) > 0
+    assert any(by[q.uid].early_exit for q in reqs if q.solver == "sndeis2"), (
+        "no score-normalized (sndeis2) row early-exited under the policy")
     for q in reqs:                         # pair-less rows run their budget
         if q.solver == "ddim":
             assert not by[q.uid].early_exit and by[q.uid].nfe == q.nfe

@@ -5,7 +5,9 @@ from .common import trained_problem, rmse_to_ref, sliced_w2, solve
 import jax
 
 SOLVERS = ["ddim", "rho_heun", "rho_kutta3", "rho_rk4",
-           "rhoab1", "rhoab2", "rhoab3", "tab1", "tab2", "tab3"]
+           "rhoab1", "rhoab2", "rhoab3", "tab1", "tab2", "tab3",
+           # next-gen families (kernel-agnostic: same ab/rk executors)
+           "dpm2m", "dpm3m", "scire2", "scire3", "sndeis2", "sndeis3"]
 
 
 def run(quick: bool = False):

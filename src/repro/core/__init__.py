@@ -23,10 +23,13 @@ the migration map).
 """
 from .sde import SDE, VPSDE, VESDE, SubVPSDE, get_sde
 from .schedules import get_timesteps, SCHEDULES
-from .coeffs import ab_coefficients, ddim_coefficients_vp, naive_ei_coefficients, AB_WEIGHTS
+from .coeffs import (ab_coefficients, ddim_coefficients_vp,
+                     eps_norm_profile, naive_ei_coefficients,
+                     sn_ab_coefficients, AB_WEIGHTS)
 from .plan import (SolverPlan, inert_row, join_rows, make_plan, pad_plan,
-                   plan_ab, plan_rk, plan_ddim, plan_euler, plan_em,
-                   plan_ipndm, plan_pndm, solver_stages, stack_plans,
+                   plan_ab, plan_dpm_multistep, plan_rk, plan_ddim,
+                   plan_euler, plan_em, plan_ipndm, plan_pndm, plan_scire,
+                   plan_seeds, plan_sndeis, solver_stages, stack_plans,
                    take_rows)
 from .sampler import (Hooks, SamplerState, init_state, join_state_rows,
                       sample, shard_state, step, take_state_rows)
@@ -38,10 +41,12 @@ from .likelihood import nll_bits_per_dim
 __all__ = [
     "SDE", "VPSDE", "VESDE", "SubVPSDE", "get_sde",
     "get_timesteps", "SCHEDULES",
-    "ab_coefficients", "ddim_coefficients_vp", "naive_ei_coefficients", "AB_WEIGHTS",
+    "ab_coefficients", "ddim_coefficients_vp", "eps_norm_profile",
+    "naive_ei_coefficients", "sn_ab_coefficients", "AB_WEIGHTS",
     "SolverPlan", "inert_row", "join_rows", "make_plan", "pad_plan",
-    "plan_ab", "plan_rk", "plan_ddim", "plan_euler", "plan_em", "plan_ipndm",
-    "plan_pndm", "solver_stages", "stack_plans", "take_rows",
+    "plan_ab", "plan_dpm_multistep", "plan_rk", "plan_ddim", "plan_euler",
+    "plan_em", "plan_ipndm", "plan_pndm", "plan_scire", "plan_seeds",
+    "plan_sndeis", "solver_stages", "stack_plans", "take_rows",
     "Hooks", "SamplerState", "init_state", "join_state_rows", "sample",
     "shard_state", "step", "take_state_rows",
     "AdaptiveResult", "AdaptiveRK23", "RetirePolicy", "error_ratio",

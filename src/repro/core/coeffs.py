@@ -60,7 +60,14 @@ def ab_coefficients(sde: SDE, ts: np.ndarray, order: int, basis: str = "t") -> t
       sde: forward SDE.
       ts: decreasing times, shape (N+1,), ts[0]=T, ts[-1]=t0.
       order: polynomial order r (0 = DDIM).
-      basis: 't' for tAB-DEIS, 'rho' for rhoAB-DEIS.
+      basis: 't' for tAB-DEIS, 'rho' for rhoAB-DEIS, 'lambda' for the
+        half-log-SNR coordinate lambda = -log rho = log(mu/sigma). Lagrange
+        extrapolation in lambda integrated against drho reproduces the
+        DPM-Solver multistep updates (Lu et al. 2022, arXiv 2206.00927)
+        exactly: drho = -exp(-lambda) dlambda turns
+        mu' * int l_j(lambda(rho)) drho into the lambda-Taylor finite
+        differences of DPM-Solver-2/3, so the "new" family is one more
+        coordinate chart over the SAME quadrature engine.
 
     Returns:
       psi:  (N,)          linear-term weights mu(ts[k+1]) / mu(ts[k])
@@ -68,8 +75,8 @@ def ab_coefficients(sde: SDE, ts: np.ndarray, order: int, basis: str = "t") -> t
                           k < order use the warmup (lower effective order) and
                           are zero-padded (paper App. B Q3).
     """
-    if basis not in ("t", "rho"):
-        raise ValueError(f"basis must be 't' or 'rho', got {basis!r}")
+    if basis not in ("t", "rho", "lambda"):
+        raise ValueError(f"basis must be 't', 'rho' or 'lambda', got {basis!r}")
     ts = np.asarray(ts, dtype=np.float64)
     n = len(ts) - 1
     mu = np.asarray(sde.mu(ts), dtype=np.float64)
@@ -86,12 +93,78 @@ def ab_coefficients(sde: SDE, ts: np.ndarray, order: int, basis: str = "t") -> t
         if basis == "rho":
             q_x = q_rho
             nodes = nodes_rho
+        elif basis == "lambda":
+            q_x = -np.log(q_rho)
+            nodes = -np.log(nodes_rho)
         else:
             q_x = np.asarray(sde.t_of_rho(q_rho), dtype=np.float64)
             nodes = nodes_t
         for j in range(r_eff + 1):
             C[k, j] = mu[k + 1] * np.sum(q_w * _lagrange_basis(nodes, j, q_x))
     return psi, C
+
+
+def eps_norm_profile(sde: SDE, t, data_var: float = 1.0) -> np.ndarray:
+    """RMS eps magnitude profile ell(t) used by score-normalized DEIS
+    (arXiv 2311.00157): under data with per-dim variance ``data_var`` the
+    marginal-average eps RMS is sigma / sqrt(mu^2 v + sigma^2) (exactly
+    sigma(t) for VP with unit data variance). SN-DEIS fits the polynomial to
+    the *normalized* integrand eps/ell -- flat across t, so the Lagrange
+    extrapolation is better conditioned over wide steps."""
+    t = np.asarray(t, dtype=np.float64)
+    mu = np.asarray(sde.mu(t), dtype=np.float64)
+    sig = np.asarray(sde.sigma(t), dtype=np.float64)
+    return sig / np.sqrt(mu ** 2 * data_var + sig ** 2)
+
+
+def sn_ab_coefficients(sde: SDE, ts: np.ndarray, order: int,
+                       basis: str = "t", data_var: float = 1.0
+                       ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    r"""Score-normalized DEIS coefficients (arXiv 2311.00157).
+
+    The eps integrand is split as eps(tau) = ell(tau) * [eps(tau)/ell(tau)]
+    and the Lagrange polynomial fits the normalized bracket, so the
+    per-step weight keeps ell *inside* the integral:
+
+        C[k, j] = mu(ts[k+1]) * \int l_j(x(rho)) ell(t(rho)) drho,
+        nu[k, j] = 1 / ell(ts[k - j])   (the history normalization vector).
+
+    The step-time weight on history entry j is ``C[k, j] * nu[k, j]`` -- the
+    executor multiplies the two, so ``nu`` is a genuine per-step coefficient
+    leaf that must survive padding/stacking/joining/sharding like any other.
+
+    Returns (psi, C, nu), each with the AB layout of :func:`ab_coefficients`
+    (warmup rows lower-order, zero-padded -- nu rows too, so padded history
+    slots carry zero weight).
+    """
+    if basis not in ("t", "rho", "lambda"):
+        raise ValueError(f"basis must be 't', 'rho' or 'lambda', got {basis!r}")
+    ts = np.asarray(ts, dtype=np.float64)
+    n = len(ts) - 1
+    mu = np.asarray(sde.mu(ts), dtype=np.float64)
+    rho = np.asarray(sde.rho(ts), dtype=np.float64)
+    ell = eps_norm_profile(sde, ts, data_var)
+
+    psi = mu[1:] / mu[:-1]
+    C = np.zeros((n, order + 1), dtype=np.float64)
+    nu = np.zeros((n, order + 1), dtype=np.float64)
+    for k in range(n):
+        r_eff = min(order, k)
+        hist_idx = np.array([k - j for j in range(r_eff + 1)])
+        q_rho, q_w = _gauss_legendre(rho[k], rho[k + 1])
+        q_t = np.asarray(sde.t_of_rho(q_rho), dtype=np.float64)
+        q_ell = eps_norm_profile(sde, q_t, data_var)
+        if basis == "rho":
+            q_x, nodes = q_rho, rho[hist_idx]
+        elif basis == "lambda":
+            q_x, nodes = -np.log(q_rho), -np.log(rho[hist_idx])
+        else:
+            q_x, nodes = q_t, ts[hist_idx]
+        for j in range(r_eff + 1):
+            C[k, j] = mu[k + 1] * np.sum(
+                q_w * q_ell * _lagrange_basis(nodes, j, q_x))
+            nu[k, j] = 1.0 / ell[hist_idx[j]]
+    return psi, C, nu
 
 
 def ddim_coefficients_vp(sde, ts: np.ndarray) -> tuple[np.ndarray, np.ndarray]:

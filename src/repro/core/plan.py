@@ -116,8 +116,10 @@ class SolverPlan:
                              "the admission-bucketing key, applied before "
                              "stacking)")
 
+        n = self.n_steps
+
         def wild(name, shape):
-            if name in _PER_STEP_COEFFS or name in _PER_KNOT_COEFFS:
+            if _leaf_role(name, shape, n) != "static":
                 return ("*",) + shape[1:]
             return shape
 
@@ -179,17 +181,50 @@ def stack_plans(plans) -> SolverPlan:
 
 
 # Per-step coefficient leaves (leading axis == n_steps) and per-knot leaves
-# (leading axis == n_steps + 1, like ``ts``). Everything else (RK ``b``
-# weights, PNDM warm-up arrays) is step-count independent. This registry is
-# what ragged-NFE serving relies on: `pad_plan` extends exactly these axes
-# and `SolverPlan.family` wildcards them, so the two can never disagree about
-# which leaves carry the step dimension.
-_PER_STEP_COEFFS = frozenset({"psi", "C", "E", "s", "h", "stage_t",
+# (leading axis == n_steps + 1, like ``ts``). This registry is what
+# ragged-NFE serving relies on: `pad_plan` extends exactly these axes,
+# `SolverPlan.family` wildcards them and `inert_row` zeroes the weight-like
+# ones, so the three can never disagree about which leaves carry the step
+# dimension.
+_PER_STEP_COEFFS = frozenset({"psi", "C", "E", "s", "nu", "h", "stage_t",
                               "stage_mu", "A"})
 _PER_KNOT_COEFFS = frozenset({"mu"})
 # time-like per-step leaves are edge-replicated (not zero-padded) so padded
 # steps never evaluate the eps network at an out-of-domain t
 _TIME_LIKE = frozenset({"stage_t"})
+# Step-count-INDEPENDENT leaves whose leading axis could *coincidentally*
+# equal n_steps (an rk "b" of 3 stages on a 3-step grid; pndm warm-up arrays
+# on tiny grids). They must never be padded/wildcarded/zeroed, so they are
+# pinned static by name and the shape heuristic below never sees them.
+_STATIC_COEFFS = frozenset({"b", "b_err", "warm_ratio_m", "warm_coef_m",
+                            "warm_ratio_n", "warm_coef_n", "warm_t_mid"})
+
+
+def _leaf_role(name: str, shape: tuple, n_steps: int) -> str:
+    """Classify a coefficient leaf as 'step' / 'knot' / 'time' / 'static'.
+
+    Registered names win; a NOVEL key (a solver family this module has never
+    heard of -- e.g. a future per-step normalization or conditioning vector)
+    falls through to a shape heuristic: leading axis == n_steps is treated as
+    a per-step weight (zero-padded, wildcarded, zeroed by ``inert_row``),
+    leading axis == n_steps + 1 as per-knot (edge-replicated, wildcarded),
+    anything else as static. This is what lets the splice primitives --
+    ``pad_plan`` / ``stack_plans`` / ``take_rows`` / ``join_rows`` /
+    ``inert_row`` -- carry arbitrary coefficient dicts through ragged
+    serving without a per-family code change."""
+    if name in _TIME_LIKE:
+        return "time"
+    if name in _PER_KNOT_COEFFS:
+        return "knot"
+    if name in _PER_STEP_COEFFS:
+        return "step"
+    if name in _STATIC_COEFFS:
+        return "static"
+    if len(shape) and shape[0] == n_steps:
+        return "step"
+    if len(shape) and shape[0] == n_steps + 1:
+        return "knot"
+    return "static"
 
 
 def pad_plan(plan: SolverPlan, n_steps: int) -> SolverPlan:
@@ -227,9 +262,10 @@ def pad_plan(plan: SolverPlan, n_steps: int) -> SolverPlan:
 
     coeffs = {}
     for name, v in plan.coeffs.items():
-        if name in _PER_KNOT_COEFFS or name in _TIME_LIKE:
+        role = _leaf_role(name, tuple(v.shape), n)
+        if role in ("knot", "time"):
             coeffs[name] = edge(v)
-        elif name in _PER_STEP_COEFFS:
+        elif role == "step":
             coeffs[name] = zeros(v)
         else:
             coeffs[name] = v
@@ -348,7 +384,7 @@ def inert_row(plan: SolverPlan) -> SolverPlan:
                          "filler, then stack with the real rows)")
     coeffs = {}
     for name, v in plan.coeffs.items():
-        if name in _PER_STEP_COEFFS and name not in _TIME_LIKE:
+        if _leaf_role(name, tuple(v.shape), plan.n_steps) == "step":
             coeffs[name] = jnp.zeros_like(v)
         else:
             coeffs[name] = v
@@ -466,6 +502,96 @@ def plan_ipndm(sde: SDE, ts, order: int = 3,
     return _mk("ab", coeffs, ts, nfe=n, error_estimate=has_pair)
 
 
+# --------------------------------------------- next-gen multistep families
+def plan_dpm_multistep(sde: SDE, ts, order: int = 2,
+                       error_estimate: bool = False) -> SolverPlan:
+    """DPM-Solver-2/3 multistep (Lu et al. 2022, arXiv 2206.00927).
+
+    DPM-Solver's multistep variants are Adams-Bashforth extrapolation of the
+    eps history in the half-log-SNR coordinate lambda = log(mu/sigma):
+    ``drho = -exp(-lambda) dlambda`` turns the DEIS quadrature
+    ``mu' * int l_j(lambda(rho)) drho`` into exactly DPM-Solver's
+    lambda-Taylor finite-difference updates, so the family reuses the AB
+    history machinery wholesale -- an ``ab`` plan with lambda-basis
+    coefficients. ``order`` is the overall convergence order (2 or 3; the
+    polynomial degree is ``order - 1``).
+
+    ``error_estimate`` adds the embedded DPM-(order-1) companion ``E``
+    (lambda-basis lower-degree weights on the same grid): the order-2/3 pair
+    the serving early-exit retire path consumes. Warmup rows are exactly
+    zero, as for ``plan_ab``."""
+    if order not in (2, 3):
+        raise ValueError(f"DPM-Solver multistep order must be 2 or 3, got "
+                         f"{order}")
+    ts = _f64(ts)
+    psi, Cm = C.ab_coefficients(sde, ts, order - 1, "lambda")
+    coeffs = {"psi": psi, "C": Cm}
+    if error_estimate:
+        _, C_lo = C.ab_coefficients(sde, ts, order - 2, "lambda")
+        E = np.array(Cm, dtype=np.float64, copy=True)
+        E[:, : order - 1] -= C_lo
+        coeffs["E"] = E
+    return _mk("ab", coeffs, ts, nfe=len(ts) - 1,
+               error_estimate=error_estimate)
+
+
+def plan_seeds(sde: SDE, ts, order: int = 1) -> SolverPlan:
+    """SEEDS: exponential-integrator solvers for the reverse *SDE* (Gonzalez
+    et al. 2023, arXiv 2305.14267).
+
+    The reverse SDE ``dx = [f x + g^2 eps/sigma] dt + g dw`` has the same
+    semilinear split as the PF-ODE but a DOUBLED eps drift (g^2/sigma instead
+    of g^2/(2 sigma)), so the deterministic part is 2x the lambda-basis AB
+    coefficients of degree ``order - 1``. The linear-SDE noise accumulated
+    over a step is exact (not Euler-Maruyama): with g^2 = 2 mu^2 rho rho',
+    Var = sigma_{k+1}^2 (e^{2h} - 1) for h = lambda_{k+1} - lambda_k > 0,
+    recovering the published SEEDS-1 / DPM-SDE-1 transition for order 1.
+
+    Stochastic like ``plan_em``: the plan carries a per-step noise scale
+    ``s`` and consumes one per-row PRNG draw per step, so SEEDS rows stack
+    with the existing stochastic serving machinery unchanged. No embedded
+    pair (the local error is noise-dominated); SEEDS rows never early-exit.
+    """
+    if order not in (1, 2, 3):
+        raise ValueError(f"SEEDS order must be 1, 2 or 3, got {order}")
+    ts = _f64(ts)
+    psi, Cm = C.ab_coefficients(sde, ts, order - 1, "lambda")
+    rho = _f64(sde.rho(ts))
+    h = np.log(rho[:-1] / rho[1:])          # lambda increments, > 0
+    s = _f64(sde.sigma(ts))[1:] * np.sqrt(np.expm1(2.0 * h))
+    return _mk("ab", {"psi": psi, "C": 2.0 * Cm, "s": s}, ts,
+               stochastic=True, nfe=len(ts) - 1)
+
+
+def plan_sndeis(sde: SDE, ts, order: int = 2, basis: str = "t",
+                data_var: float = 1.0,
+                error_estimate: bool = False) -> SolverPlan:
+    """Score-normalized DEIS (arXiv 2311.00157).
+
+    Fits the Lagrange polynomial to the *normalized* integrand
+    ``eps(tau)/ell(tau)`` (``ell`` = the RMS eps-magnitude profile, flat
+    across t), keeping ``ell`` inside the quadrature. The plan carries the
+    per-step normalization vector ``nu[k, j] = 1/ell(ts[k-j])`` as a NEW
+    coefficient key: the executor weights history entry j by
+    ``C[k, j] * nu[k, j]``. The splice primitives treat coefficient dicts
+    generically, so ``nu`` survives padding, stacking, joining, compaction
+    and sharding like any registered leaf.
+
+    ``error_estimate`` adds the order-(r-1) companion ``E`` computed with
+    the SAME normalization profile (the step applies ``E * nu`` too), so
+    SN-DEIS rows retire through serving's early-exit path."""
+    ts = _f64(ts)
+    psi, Cm, nu = C.sn_ab_coefficients(sde, ts, order, basis, data_var)
+    coeffs = {"psi": psi, "C": Cm, "nu": nu}
+    has_pair = error_estimate and order >= 1
+    if has_pair:
+        _, C_lo, _ = C.sn_ab_coefficients(sde, ts, order - 1, basis, data_var)
+        E = np.array(Cm, dtype=np.float64, copy=True)
+        E[:, :order] -= C_lo
+        coeffs["E"] = E
+    return _mk("ab", coeffs, ts, nfe=len(ts) - 1, error_estimate=has_pair)
+
+
 # --------------------------------------------------------------------- RK
 _TABLEAUS = {
     "heun": (np.array([0.0, 1.0]),
@@ -536,6 +662,63 @@ def plan_rk(sde: SDE, ts, method: str = "heun",
     return _mk("rk", coeffs, ts, nfe=n * s, error_estimate=error_estimate)
 
 
+def plan_scire(sde: SDE, ts, order: int = 2, rd_m: float = 1,
+               error_estimate: bool = False) -> SolverPlan:
+    """SciRE-Solver: recursive-difference score-integrand RK on the NSR
+    coordinate (Li et al. 2023, arXiv 2308.07896).
+
+    SciRE integrates ``dy/drho = eps_hat`` (the NSR rho is the paper's
+    score-integrand coordinate) with explicit RK stages whose combination
+    weights are scaled by the recursive-difference factor
+
+        phi1(m) = (3/4) * (1 - (-1/3)^m),
+
+    the paper's truncation of the recursive finite-difference expansion of
+    the score integrand. ``rd_m = 1`` gives ``phi1 = 1`` -- the classical
+    tableau with provable order (the default, so the convergence-order
+    harness holds at the nominal order); ``rd_m = float("inf")`` gives the
+    paper's asymptotic variant ``phi1 = 3/4`` (formally lower classical
+    order, tuned to trained score networks' integrand statistics).
+
+    ``order`` in {2, 3} sets the stage count (2/3 evals per interval --
+    serving budgets via :func:`solver_stages`). ``error_estimate`` adds the
+    embedded Euler-from-stage-0 companion ``b_err``, so SciRE rows carry a
+    local-error estimate from their first step."""
+    if order not in (2, 3):
+        raise ValueError(f"SciRE order must be 2 or 3, got {order}")
+    phi1 = 0.75 * (1.0 - (-1.0 / 3.0) ** rd_m)
+    ts = _f64(ts)
+    n = len(ts) - 1
+    rho = _f64(sde.rho(ts))
+    h = rho[1:] - rho[:-1]  # negative steps
+    if order == 2:
+        c = np.array([0.0, 0.5])
+        a_rows = [np.array([]), np.array([0.5])]
+        # b2 = 1/(2 r1 phi1) with r1 = 1/2; phi1 = 1 recovers midpoint-Heun
+        b = np.array([1.0 - 1.0 / phi1, 1.0 / phi1])
+        b_lo = np.array([1.0, 0.0])
+    else:
+        c = np.array([0.0, 1.0 / 3.0, 2.0 / 3.0])
+        a_rows = [np.array([]), np.array([1.0 / 3.0]),
+                  np.array([0.0, 2.0 / 3.0])]
+        # b3 = 3/(4 phi1); phi1 = 1 recovers Heun's third-order rule
+        b = np.array([1.0 - 0.75 / phi1, 0.0, 0.75 / phi1])
+        b_lo = np.array([1.0, 0.0, 0.0])
+    s = len(c)
+    a_mat = np.zeros((s, s))
+    for i, row in enumerate(a_rows):
+        a_mat[i, : len(row)] = row
+    A = np.broadcast_to(a_mat, (n, s, s)).copy()
+    stage_rho = rho[:-1, None] + c[None, :] * h[:, None]
+    stage_rho = np.maximum(stage_rho, float(sde.rho(ts[-1])) * (1 - 1e-12))
+    stage_t = _f64(sde.t_of_rho(stage_rho))
+    coeffs = {"h": h, "mu": _f64(sde.mu(ts)), "stage_t": stage_t,
+              "stage_mu": _f64(sde.mu(stage_t)), "A": A, "b": b}
+    if error_estimate:
+        coeffs["b_err"] = b - b_lo
+    return _mk("rk", coeffs, ts, nfe=n * s, error_estimate=error_estimate)
+
+
 # ------------------------------------------------------------------- PNDM
 def plan_pndm(sde: SDE, ts, error_estimate: bool = False) -> SolverPlan:
     """Original PNDM (Liu et al. 2022): pseudo-RK4 warmup for the first 3
@@ -585,13 +768,19 @@ def solver_stages(name: str) -> int:
         return len(_TABLEAUS["midpoint"][0])
     if n.startswith("rho_") and n[4:] in _TABLEAUS:
         return len(_TABLEAUS[n[4:]][0])
+    if n.startswith("scire"):
+        return int(n[5:] or 2)  # SciRE-r runs r stages per interval
     return 1
 
 
 def make_plan(name: str, sde: SDE, ts, **kw) -> SolverPlan:
     """Name-based factory mirroring ``make_solver``. Names: ddim, tab{0..3},
     rhoab{0..3}, rho_heun, rho_midpoint, rho_kutta3, rho_rk4, dpm2, euler,
-    naive_ei, em, ddim_eta (requires explicit ``eta=``), ipndm{1..3}, pndm.
+    naive_ei, em, ddim_eta (requires explicit ``eta=``), ipndm{1..3}, pndm,
+    dpm{2,3}m (DPM-Solver multistep), seeds{1..3} (exponential SDE solvers,
+    stochastic), scire{2,3} (recursive-difference RK; ``rd_m=`` selects the
+    phi1 variant), sndeis{1..3} (score-normalized DEIS; ``data_var=`` sets
+    the normalization profile).
 
     ``error_estimate=True`` requests embedded local-error estimates and is
     accepted for EVERY name: families with a genuine lower-order pair
@@ -611,8 +800,20 @@ def make_plan(name: str, sde: SDE, ts, **kw) -> SolverPlan:
                        error_estimate=ee, **kw)
     if n.startswith("rho_"):
         return plan_rk(sde, ts, method=n[4:], error_estimate=ee)
+    if n in ("dpm2m", "dpm3m"):
+        return plan_dpm_multistep(sde, ts, order=int(n[3]), error_estimate=ee)
     if n == "dpm2":
         return plan_rk(sde, ts, method="dpm2", error_estimate=ee)
+    if n.startswith("seeds"):
+        return plan_seeds(sde, ts, order=int(n[5:] or 1))
+    if n.startswith("scire"):
+        return plan_scire(sde, ts, order=int(n[5:] or 2),
+                          rd_m=kw.get("rd_m", 1), error_estimate=ee)
+    if n.startswith("sndeis"):
+        return plan_sndeis(sde, ts, order=int(n[6:] or 2),
+                           basis=kw.get("basis", "t"),
+                           data_var=kw.get("data_var", 1.0),
+                           error_estimate=ee)
     if n == "euler":
         return plan_euler(sde, ts)
     if n == "naive_ei":

@@ -293,6 +293,11 @@ def _step_ab(plan: SolverPlan, k, state: SamplerState, eps_fn: EpsFn,
     t_k = _at_step(plan.ts, k, stk)
     psi = _at_step(c["psi"], k, stk)
     Cw = _at_step(c["C"], k, stk)
+    if "nu" in c:
+        # score-normalized families (sndeis): the polynomial was fitted to
+        # eps/ell, so history entry j is weighted by C[k, j] * nu[k, j]
+        nu = _at_step(c["nu"], k, stk)
+        Cw = Cw * nu
     eps = _apply_eps(hooks, x, t_k, eps_fn(x, t_k))
     hist = jnp.concatenate([eps[None], state.hist[:-1]], axis=0)
     if plan.fused:
@@ -315,8 +320,10 @@ def _step_ab(plan: SolverPlan, k, state: SamplerState, eps_fn: EpsFn,
         x_new = x_new + bcast(s, x) * _noise_like(sub, x, stk)
     if "E" in c:
         Ew = _at_step(c["E"], k, stk)
-        err = _update_err(_comb(Ew, hist, stk), jnp.any(Ew != 0, axis=-1),
-                          state.err, stk)
+        live = jnp.any(Ew != 0, axis=-1)
+        if "nu" in c:
+            Ew = Ew * nu          # the pair difference is normalized too
+        err = _update_err(_comb(Ew, hist, stk), live, state.err, stk)
     else:
         err = state.err
     return SamplerState(x=x_new, hist=hist, key=key, k=state.k + 1, err=err)

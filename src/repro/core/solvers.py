@@ -56,4 +56,6 @@ def make_solver(name: str, sde: SDE, ts, **kw) -> SolverPlan:
 SOLVER_NAMES = ["ddim", "tab1", "tab2", "tab3", "rhoab1", "rhoab2", "rhoab3",
                 "rho_heun", "rho_midpoint", "rho_kutta3", "rho_rk4", "dpm2",
                 "euler", "naive_ei", "em", "ddim_eta", "ipndm1", "ipndm2",
-                "ipndm3", "pndm"]
+                "ipndm3", "pndm",
+                "dpm2m", "dpm3m", "seeds1", "seeds2", "seeds3",
+                "scire2", "scire3", "sndeis1", "sndeis2", "sndeis3"]

@@ -37,15 +37,27 @@ def fuzz_property(fn):
     return pytest.mark.parametrize("seed", _EXEMPLAR_SEEDS)(fn)
 
 
-# one entry per signature family: names that stack at a shared grid
+# one entry per signature family: names that stack at a shared grid.
+# dpm2m/dpm3m are lambda-basis AB plans, so they land in the SAME executor
+# families as the t/rho-basis widths; seeds1 shares the stochastic
+# {psi, C, s} layout with em/ddim_eta; scire2/3 are rk tableaus with the
+# stage counts of heun/kutta3; sndeis carries the extra ``nu`` key and so
+# forms its own (per-width) families.
 _FAMILIES = [
     ("ab_w1", ["ddim", "euler", "naive_ei"], 2),
-    ("ab_w3", ["tab2", "ipndm2"], 2),
+    ("ab_w2", ["tab1", "ipndm1", "dpm2m"], 2),
+    ("ab_w3", ["tab2", "ipndm2", "dpm3m"], 2),
     ("ab_w4", ["tab3", "ipndm3"], 3),
-    ("stoch", ["em", "ddim_eta"], 2),
-    ("rk2", ["rho_heun", "rho_midpoint", "dpm2"], 2),
+    ("stoch", ["em", "ddim_eta", "seeds1"], 2),
+    ("stoch_w2", ["seeds2"], 2),
+    ("stoch_w3", ["seeds3"], 3),
+    ("rk2", ["rho_heun", "rho_midpoint", "dpm2", "scire2"], 2),
+    ("rk3", ["rho_kutta3", "scire3"], 2),
     ("rk4", ["rho_rk4"], 2),
     ("pndm", ["pndm"], 5),
+    ("sn_w2", ["sndeis1"], 2),
+    ("sn_w3", ["sndeis2"], 2),
+    ("sn_w4", ["sndeis3"], 3),
 ]
 
 
@@ -217,6 +229,65 @@ def test_inert_row_is_signature_stable_filler(seed):
             np.testing.assert_array_equal(np.asarray(v),
                                           np.asarray(p.coeffs[name]))
     assert stack_plans([p, filler]).batch == 2
+
+
+# ------------------------------------------- novel coefficient keys (generic)
+def _with_novel_keys(p, rng, static_len=None):
+    """Attach coefficient leaves under names NO splice primitive has ever
+    heard of: a per-step matrix, a per-knot vector, and a static tableau
+    (leading axis deliberately != n_steps and != n_steps + 1). The static
+    leaf is a family constant, so joiners must carry it at the STACK's
+    length, not their own grid's -- pass ``static_len`` for that."""
+    import dataclasses
+    n = p.n_steps
+    extra = {
+        "zeta_novel": jnp.asarray(rng.randn(n, 2)),          # per-step
+        "knotv_novel": jnp.asarray(rng.randn(n + 1)),        # per-knot
+        "tableau_novel": jnp.asarray(rng.randn(static_len or n + 3)),
+    }
+    return dataclasses.replace(p, coeffs={**p.coeffs, **extra})
+
+
+@fuzz_property
+def test_novel_coeff_key_roundtrips_all_splices(seed):
+    """The satellite-3 regression: a plan carrying coefficient keys the
+    splice primitives have no registry entry for round-trips through
+    pad -> stack -> join -> take bitwise-intact. Padding classifies the
+    novel leaves by shape (per-step zero-padded, per-knot edge-replicated,
+    static untouched), and every later splice treats the dict generically."""
+    rng = np.random.RandomState(seed % (2**31))
+    n, pad = int(rng.randint(3, 8)), int(rng.randint(1, 4))
+    base = _mk("tab2", n)
+    p = _with_novel_keys(base, rng)
+    assert p.signature != base.signature        # novel keys are trace-visible
+
+    padded = pad_plan(p, n + pad)
+    z = np.asarray(padded.coeffs["zeta_novel"])
+    np.testing.assert_array_equal(z[:n], np.asarray(p.coeffs["zeta_novel"]))
+    assert not np.any(z[n:])                    # per-step: zero-padded
+    kv = np.asarray(padded.coeffs["knotv_novel"])
+    np.testing.assert_array_equal(kv[:n + 1],
+                                  np.asarray(p.coeffs["knotv_novel"]))
+    np.testing.assert_array_equal(kv[n + 1:],
+                                  np.full(pad, kv[n]))      # knot: replicated
+    np.testing.assert_array_equal(np.asarray(padded.coeffs["tableau_novel"]),
+                                  np.asarray(p.coeffs["tableau_novel"]))
+
+    q = _with_novel_keys(_mk("tab2", n), rng)   # same shapes, fresh values
+    stacked = stack_plans([padded, pad_plan(q, n + pad)])
+    joiner = _with_novel_keys(_mk("tab2", int(rng.randint(3, n + 1))), rng,
+                              static_len=n + 3)
+    joined = join_rows(stacked, [joiner])
+    back = take_rows(joined, [0, 1])
+    _leaves_equal(back, stacked)                # pad->stack->join->take
+    row2 = take_rows(joined, [2])
+    _leaves_equal(row2, stack_plans([pad_plan(joiner, n + pad)]))
+    # inert filler zeroes the novel per-step leaf, replicates the rest
+    filler = inert_row(p)
+    assert filler.signature == p.signature
+    assert not np.any(np.asarray(filler.coeffs["zeta_novel"]))
+    np.testing.assert_array_equal(np.asarray(filler.coeffs["tableau_novel"]),
+                                  np.asarray(p.coeffs["tableau_novel"]))
 
 
 # ------------------------------------------------- explicit error contracts

@@ -34,8 +34,12 @@ from repro.configs.base import get_config
 from repro.models import transformer as T
 from repro.serving.engine import DiffusionServeEngine, Request
 
-# one ab-deterministic, one ab-stochastic, one wide-ab family in the mix
-_SOLVERS = ["ddim", "euler", "em", "ddim_eta", "tab2"]
+# every solver generation in one stream: classic ab deterministic/stochastic
+# and wide-ab families, plus one representative of each next-gen family
+# (DPM-Solver multistep, SEEDS exponential SDE, SciRE rk, score-normalized
+# DEIS with its extra nu coefficient key)
+_SOLVERS = ["ddim", "euler", "em", "ddim_eta", "tab2",
+            "dpm2m", "seeds1", "scire2", "sndeis2"]
 _MAX_TICKS = 2000
 
 
@@ -216,7 +220,7 @@ def test_fuzz_early_exit_bitwise_vs_solo_same_controller(diff_setup,
         if res.early_exit:
             assert res.nfe < req.nfe and res.final_err <= _EE_POLICY["tol"]
         # pair-less solvers must always run their full budget
-        if req.solver in ("ddim", "euler", "em", "ddim_eta"):
+        if req.solver in ("ddim", "euler", "em", "ddim_eta", "seeds1"):
             assert not res.early_exit and res.nfe == req.nfe
 
     n_exec = eng.num_executors
@@ -226,6 +230,35 @@ def test_fuzz_early_exit_bitwise_vs_solo_same_controller(diff_setup,
     for uid in got:
         np.testing.assert_array_equal(warm[uid].tokens, got[uid].tokens)
         assert warm[uid].nfe == got[uid].nfe
+
+
+@pytest.mark.parametrize("solver", ["sndeis2", "dpm2m", "scire2"])
+def test_new_family_early_exit_via_retire_policy(diff_setup, solver):
+    """The next-gen families with embedded pairs retire through the SAME
+    RetirePolicy path as tab2 -- for sndeis that exercises the ``E * nu``
+    normalized estimate end-to-end (the acceptance criterion that
+    plan_sndeis early-exits where a pair exists). Early exits are bitwise
+    vs a solo engine under the same controller, and pair-carrying rows
+    spend fewer NFEs than budgeted."""
+    from repro.core.adaptive import RetirePolicy
+
+    params, cfg = diff_setup
+    reqs = [Request(uid=i, seq_len=8, nfe=8 + 2 * (i % 2), solver=solver,
+                    seed=i) for i in range(3)]
+    eng = DiffusionServeEngine(params, cfg, seq_len_buckets=(8,), max_group=4,
+                               retire=RetirePolicy(**_EE_POLICY))
+    got = {r.uid: r for r in eng.serve(list(reqs))}
+    assert sum(r.early_exit for r in got.values()) > 0
+    solo = DiffusionServeEngine(params, cfg, seq_len_buckets=(8,),
+                                retire=RetirePolicy(**_EE_POLICY))
+    for q in reqs:
+        want = solo.serve([Request(uid=q.uid, seq_len=q.seq_len, nfe=q.nfe,
+                                   solver=q.solver, seed=q.seed)])[0]
+        res = got[q.uid]
+        np.testing.assert_array_equal(want.tokens, res.tokens)
+        assert (want.early_exit, want.nfe) == (res.early_exit, res.nfe)
+        if res.early_exit:
+            assert res.nfe < q.nfe and res.final_err <= _EE_POLICY["tol"]
 
 
 # ------------------------------------------- cancellation (race-tolerant)
@@ -492,9 +525,12 @@ cfg = get_config("gemma_2b").reduced().with_(objective="diffusion")
 params = T.init_params(cfg, jax.random.PRNGKey(0))
 
 rng = np.random.RandomState(3)
+# mixed-generation traffic UNDER sharding: classic names plus one
+# representative per next-gen family (dpm multistep, seeds, scire, sn-deis
+# with its nu coefficient leaf, which must shard like any other plan leaf)
 workload = [(int(rng.randint(0, 5)), Request(
     uid=i, seq_len=int(rng.randint(5, 9)), nfe=int(rng.choice([3, 5, 7])),
-    solver=["ddim", "euler", "em"][i %% 3],
+    solver=["ddim", "dpm2m", "seeds1", "scire2", "sndeis2", "em"][i %% 6],
     seed=int(rng.randint(100)), priority=int(rng.randint(2))))
     for i in range(10)]
 

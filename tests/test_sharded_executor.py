@@ -62,6 +62,23 @@ def test_plan_specs_shard_request_axis_when_divisible():
     assert specs1.ts == P()
 
 
+def test_plan_specs_cover_new_family_coeff_leaves():
+    """The spec rule is leaf-generic: the sndeis per-step ``nu`` key, the
+    seeds noise scale ``s``, the scire stage tableaus and the lambda-basis
+    dpm tables all pick up the request axis on a stacked plan -- there is no
+    per-family spec table to fall out of date."""
+    mesh = FakeMesh(data=4)
+    for name in ("sndeis2", "seeds1", "scire2", "dpm3m"):
+        plan = stack_plans([make_plan(name, SDE, TS)] * 4)
+        specs = R.plan_specs(plan, mesh)
+        assert specs.ts == P("data", None)
+        assert set(specs.coeffs) == set(plan.coeffs)
+        for key_, s in specs.coeffs.items():
+            assert s[0] == "data", (name, key_, s)
+    assert "nu" in R.plan_specs(
+        stack_plans([make_plan("sndeis2", SDE, TS)] * 4), mesh).coeffs
+
+
 def test_state_specs_layout():
     """x shards on axis 0, hist on axis 1 (history axis leads), keys on
     axis 0, step counter replicates."""
