@@ -1,0 +1,28 @@
+"""repro.analysis -- repo-specific static analysis for the DEIS stack.
+
+Four AST-based checkers (stdlib ``ast``, no third-party deps) mechanize
+the invariants the repo previously defended only by convention:
+
+* **RL001** host-sync lint: no ``.item()`` / ``block_until_ready`` /
+  ``np.asarray`` / scalar coercions / device-valued branches / ``print``
+  inside the solver hot path (sampler, plan splice primitives, kernels,
+  the engine tick path, the obs fast path).
+* **RL002** recompile-hazard lint: every ``jax.jit`` call site -- jit
+  inside loops, loop-variable closure capture, non-literal or missing
+  ``static_argnames``, f-string / dict-order compile-cache keys.
+* **RL003** serving lock discipline: the driver/engine/registry threading
+  contract as an ownership table, enforced over method call graphs.
+* **RL004** plan-leaf guard: coefficient keys built by ``plan_*`` builders
+  must be classifiable by ``core/plan``'s role registries and covered by
+  the sharding specs.
+
+Run ``python -m repro.analysis src/`` (CI's lint job does, ratcheting the
+per-rule counts via ``BENCH_static.json``). Suppress an intentional site
+with ``# repro: allow[RULE] <one-line justification>``. See
+docs/static_analysis.md for the full catalog.
+"""
+from .base import Checker, FileContext, Violation
+from .cli import CHECKERS, RULES, Report, analyze, main, write_bench
+
+__all__ = ["Checker", "FileContext", "Violation", "CHECKERS", "RULES",
+           "Report", "analyze", "main", "write_bench"]

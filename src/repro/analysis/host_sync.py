@@ -1,0 +1,265 @@
+"""RL001 -- host-sync lint for the solver hot path.
+
+DEIS's value proposition is that a 10-NFE solve is ~10 cheap device steps;
+one stray host sync per step serializes the device queue and erases the
+win. Inside the configured hot scopes (``config.HOT_SCOPES``, or any file
+carrying a ``# repro: hot-path`` directive) this checker flags:
+
+* ``.item()``, ``x.block_until_ready()`` / ``jax.block_until_ready``,
+  ``jax.device_get`` -- explicit device->host syncs ("sync" group);
+* ``np.asarray`` / ``np.array`` of a value that is not provably host-side
+  already -- an implicit transfer ("sync");
+* ``print(...)`` -- host I/O in the step loop ("sync");
+* ``float()`` / ``int()`` / ``bool()`` of a possibly-device value -- each
+  is an implicit blocking transfer ("coerce");
+* ``if``/``while``/``assert`` tests built from jnp array expressions or
+  ``.any()``/``.all()`` calls -- an implicit ``bool()`` sync and, under
+  jit, a TracerBoolConversionError waiting to happen ("branch").
+
+A lightweight per-function taint pass tracks names assigned from numpy /
+math / time / ``jax.device_get`` results so host-side bookkeeping (the
+engine coercing an already-fetched error vector, say) does not get flagged.
+Deliberate boundary syncs carry ``# repro: allow[RL001]`` with a one-line
+justification -- see docs/static_analysis.md.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import Iterable, Optional, Sequence
+
+from . import config
+from .base import Checker, FileContext, Violation, dotted, import_aliases, resolve
+
+_SYNC_ATTRS = {"block_until_ready": "blocks until the device queue drains",
+               "device_get": "explicit device->host transfer",
+               "item": "device->host scalar sync"}
+_COERCIONS = {"float", "int", "bool"}
+# call roots whose results are host-side values, for the taint pass
+_HOST_ROOTS = ("numpy.", "math.", "time.", "jax.device_get")
+
+
+class HostSyncChecker(Checker):
+    rule = "RL001"
+    title = "host-sync lint (hot-path modules must not sync or branch on device values)"
+
+    def check(self, ctxs: Sequence[FileContext]) -> Iterable[Violation]:
+        for ctx in ctxs:
+            if ctx.tree is None:
+                continue
+            for region, checks in self._regions(ctx):
+                yield from _Scan(self, ctx, checks).run(region)
+
+    # ------------------------------------------------------------- scoping
+    def _regions(self, ctx: FileContext):
+        """Yield (ast node, enabled checks) pairs for the hot regions of
+        this file; empty when the file is not hot path."""
+        if "hot-path" in ctx.directives:
+            yield ctx.tree, config.ALL_CHECKS
+            return
+        for scope in config.HOT_SCOPES:
+            if not re.search(scope.pattern, ctx.posix):
+                continue
+            if scope.functions is not None:
+                wanted = set(scope.functions)
+                for node in ast.walk(ctx.tree):
+                    if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                            and node.name in wanted:
+                        yield node, scope.checks
+            elif scope.entry is not None:
+                cls_name, entry = scope.entry
+                for node in ast.walk(ctx.tree):
+                    if isinstance(node, ast.ClassDef) and node.name == cls_name:
+                        for meth in _reachable_methods(node, entry):
+                            yield meth, scope.checks
+            else:
+                yield ctx.tree, scope.checks
+            return  # first matching scope wins
+
+
+def _reachable_methods(cls: ast.ClassDef, entry: str) -> list:
+    """Methods of ``cls`` reachable from ``entry`` via self-references."""
+    methods = {n.name: n for n in cls.body
+               if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))}
+    seen, stack = {entry}, [entry]
+    while stack:
+        m = methods.get(stack.pop())
+        if m is None:
+            continue
+        for node in ast.walk(m):
+            if isinstance(node, ast.Attribute) and \
+                    isinstance(node.value, ast.Name) and \
+                    node.value.id == "self" and node.attr in methods and \
+                    node.attr not in seen:
+                seen.add(node.attr)
+                stack.append(node.attr)
+    return [methods[n] for n in sorted(seen) if n in methods]
+
+
+class _Scan(ast.NodeVisitor):
+    """Walk one hot region, tracking per-function host-taint."""
+
+    def __init__(self, checker: HostSyncChecker, ctx: FileContext,
+                 checks: frozenset):
+        self.checker = checker
+        self.ctx = ctx
+        self.checks = checks
+        self.aliases = import_aliases(ctx.tree)
+        self.jnp = {name for name, mod in self.aliases.items()
+                    if mod == "jax.numpy"}
+        self.taint: list[set] = []   # stack of per-function host-name sets
+        self.out: list[Violation] = []
+
+    def run(self, region: ast.AST) -> list[Violation]:
+        if isinstance(region, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            self._visit_function(region)
+        else:
+            self.visit(region)
+        return self.out
+
+    # --------------------------------------------------------------- taint
+    def _is_host(self, node: ast.AST) -> bool:
+        """Conservatively true when ``node`` is a host-side value."""
+        if isinstance(node, ast.Constant):
+            return True
+        if isinstance(node, ast.Name):
+            return any(node.id in t for t in self.taint)
+        if isinstance(node, (ast.Attribute, ast.Subscript)):
+            return self._is_host(node.value)
+        if isinstance(node, ast.Call):
+            name = resolve(dotted(node.func), self.aliases)
+            if name and (name.startswith(_HOST_ROOTS) or
+                         name in ("len", "sorted", "min", "max", "abs",
+                                  "range", "enumerate", "sum")):
+                return True
+            if name in _COERCIONS:
+                # float(x) is host-valued only if x already was -- otherwise
+                # the coercion is itself the sync and must stay flaggable
+                # (e.g. ``k = int(k)`` must not self-taint k).
+                return bool(node.args) and self._is_host(node.args[0])
+            return False
+        if isinstance(node, ast.BinOp):
+            return self._is_host(node.left) and self._is_host(node.right)
+        if isinstance(node, (ast.Tuple, ast.List)):
+            return all(self._is_host(e) for e in node.elts)
+        if isinstance(node, ast.Compare):
+            return self._is_host(node.left) and \
+                all(self._is_host(c) for c in node.comparators)
+        if isinstance(node, ast.IfExp):
+            return self._is_host(node.body) and self._is_host(node.orelse)
+        return False
+
+    def _taint_function(self, fn) -> set:
+        """Forward pass over ``fn``'s own statements (not nested defs)
+        collecting names bound to host-side values."""
+        host: set[str] = set()
+        self.taint.append(host)
+
+        def walk(stmts):
+            for st in stmts:
+                if isinstance(st, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                   ast.ClassDef)):
+                    continue
+                if isinstance(st, ast.Assign) and self._is_host(st.value):
+                    for t in st.targets:
+                        for n in ast.walk(t):
+                            if isinstance(n, ast.Name):
+                                host.add(n.id)
+                for field in ("body", "orelse", "finalbody"):
+                    walk(getattr(st, field, []) or [])
+                for h in getattr(st, "handlers", []) or []:
+                    walk(h.body)
+                for item in getattr(st, "items", []) or []:
+                    pass
+        walk(fn.body)
+        self.taint.pop()
+        return host
+
+    # -------------------------------------------------------------- visits
+    def _visit_function(self, fn) -> None:
+        self.taint.append(self._taint_function(fn))
+        for st in fn.body:
+            self.visit(st)
+        self.taint.pop()
+
+    def visit_FunctionDef(self, node) -> None:
+        self._visit_function(node)
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+    def _flag(self, node, msg: str) -> None:
+        self.out.append(self.checker.violation(self.ctx, node, msg))
+
+    def visit_Call(self, node: ast.Call) -> None:
+        func = node.func
+        if config.SYNC in self.checks:
+            if isinstance(func, ast.Attribute) and func.attr in _SYNC_ATTRS:
+                self._flag(node, f"host sync: `{func.attr}()` "
+                                 f"({_SYNC_ATTRS[func.attr]}) in the hot path")
+            name = resolve(dotted(func), self.aliases)
+            if name in ("numpy.asarray", "numpy.array") and node.args and \
+                    not self._is_host(node.args[0]) and \
+                    not _contains_explicit_fetch(node.args[0]):
+                self._flag(node, "host sync: np.asarray of a (possibly) "
+                                 "device value materializes on the host")
+            if name == "print":
+                self._flag(node, "host I/O: print() in the hot path "
+                                 "(route through obs.Tracer/metrics instead)")
+        if config.COERCE in self.checks and isinstance(func, ast.Name) and \
+                func.id in _COERCIONS and len(node.args) == 1 and \
+                not isinstance(node.args[0], ast.Constant) and \
+                not self._is_host(node.args[0]):
+            self._flag(node, f"implicit sync: `{func.id}()` of a (possibly) "
+                             "device value blocks on the transfer")
+        self.generic_visit(node)
+
+    def _check_test(self, node, test: ast.AST, kind: str) -> None:
+        if config.BRANCH not in self.checks:
+            return
+        for sub in ast.walk(test):
+            if not isinstance(sub, ast.Call):
+                continue
+            func = sub.func
+            if isinstance(func, ast.Attribute) and \
+                    func.attr in ("any", "all") and not sub.args and \
+                    not self._is_host(func.value):
+                self._flag(node, f"branch on device value: `{kind}` over "
+                                 f"`.{func.attr}()` forces a host bool() "
+                                 "(use jnp.where / lax.cond)")
+                return
+            name = dotted(func)
+            if name:
+                head, _, rest = name.partition(".")
+                if head in self.jnp and rest and \
+                        rest not in config.HOST_SAFE_JNP:
+                    self._flag(node, f"branch on device value: `{kind}` test "
+                                     f"calls `{name}` (implicit bool() sync; "
+                                     "retraces under jit)")
+                    return
+
+    def visit_If(self, node: ast.If) -> None:
+        self._check_test(node, node.test, "if")
+        self.generic_visit(node)
+
+    def visit_While(self, node: ast.While) -> None:
+        self._check_test(node, node.test, "while")
+        self.generic_visit(node)
+
+    def visit_Assert(self, node: ast.Assert) -> None:
+        self._check_test(node, node.test, "assert")
+        self.generic_visit(node)
+
+    def visit_IfExp(self, node: ast.IfExp) -> None:
+        self._check_test(node, node.test, "ternary")
+        self.generic_visit(node)
+
+
+def _contains_explicit_fetch(node: ast.AST) -> bool:
+    """True when the expression already routes through jax.device_get --
+    the asarray around it is then host-side bookkeeping, and the device_get
+    itself is the (separately flagged) sync."""
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Call) and isinstance(sub.func, ast.Attribute) \
+                and sub.func.attr == "device_get":
+            return True
+    return False

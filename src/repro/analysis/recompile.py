@@ -1,0 +1,258 @@
+"""RL002 -- recompile-hazard lint for every ``jax.jit`` call site.
+
+Warm serving traffic must converge to a fixed executor set (the engine
+asserts zero warm recompiles in its benchmarks); these are the static
+hazards that silently break that:
+
+* ``jax.jit`` (or ``functools.partial(jax.jit, ...)``) called inside a
+  ``for``/``while`` loop -- a fresh jitted callable per iteration means a
+  fresh trace per iteration (worse with a lambda/local def: the cache can
+  never hit across iterations);
+* a jitted function whose free variables include an enclosing loop's
+  target -- the Python scalar is captured at trace time and silently
+  stale (or retraces) on later iterations;
+* ``static_argnums``/``static_argnames`` given as a non-literal -- the
+  compile-cache key then depends on runtime state;
+* a resolvable jitted def with bool/str-flavored parameters (annotation or
+  default) that are not marked static -- they either retrace per value or
+  fail under tracing;
+* f-strings or unsorted ``.items()`` iteration feeding keys of a
+  ``*cache*``/``*compiled*`` mapping -- formatting collapses distinct
+  dtypes/values into one key, and dict order makes equal plans miss.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import Iterable, Optional, Sequence
+
+from .base import Checker, FileContext, Violation, dotted, import_aliases, resolve
+
+_CACHE_NAME = re.compile(r"cache|compiled", re.IGNORECASE)
+_STATIC_KWARGS = ("static_argnums", "static_argnames")
+
+
+def _is_literal(node: ast.AST) -> bool:
+    if isinstance(node, ast.Constant):
+        return True
+    if isinstance(node, (ast.Tuple, ast.List, ast.Set)):
+        return all(_is_literal(e) for e in node.elts)
+    return False
+
+
+def _free_names(fn) -> set:
+    """Names a def reads but does not bind (approximate closure capture)."""
+    bound = {a.arg for a in (fn.args.args + fn.args.kwonlyargs +
+                             fn.args.posonlyargs)}
+    if fn.args.vararg:
+        bound.add(fn.args.vararg.arg)
+    if fn.args.kwarg:
+        bound.add(fn.args.kwarg.arg)
+    loads, stores = set(), set(bound)
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Name):
+            if isinstance(node.ctx, ast.Load):
+                loads.add(node.id)
+            else:
+                stores.add(node.id)
+    return loads - stores
+
+
+class RecompileChecker(Checker):
+    rule = "RL002"
+    title = "recompile-hazard lint (jit call sites and compile-cache keys)"
+
+    def check(self, ctxs: Sequence[FileContext]) -> Iterable[Violation]:
+        for ctx in ctxs:
+            if ctx.tree is not None:
+                yield from _JitScan(self, ctx).run()
+
+
+class _JitScan(ast.NodeVisitor):
+    def __init__(self, checker: RecompileChecker, ctx: FileContext):
+        self.checker = checker
+        self.ctx = ctx
+        self.aliases = import_aliases(ctx.tree)
+        self.loops: list[ast.AST] = []          # enclosing loop stack
+        self.loop_targets: list[set] = []       # their target names
+        self.scopes: list[dict] = [{}]          # name -> FunctionDef
+        self.out: list[Violation] = []
+
+    def run(self) -> list[Violation]:
+        self.visit(self.ctx.tree)
+        return self.out
+
+    def _flag(self, node, msg: str) -> None:
+        self.out.append(self.checker.violation(self.ctx, node, msg))
+
+    # ---------------------------------------------------------- structure
+    def visit_FunctionDef(self, node) -> None:
+        self.scopes[-1][node.name] = node
+        self._check_decorators(node)
+        self.scopes.append({})
+        loops, targets = self.loops, self.loop_targets
+        self.loops, self.loop_targets = [], []   # loops don't cross scopes
+        self.generic_visit(node)
+        self.loops, self.loop_targets = loops, targets
+        self.scopes.pop()
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+    def _visit_loop(self, node, targets: set) -> None:
+        self.loops.append(node)
+        self.loop_targets.append(targets)
+        self.generic_visit(node)
+        self.loops.pop()
+        self.loop_targets.pop()
+
+    def visit_For(self, node: ast.For) -> None:
+        names = {n.id for n in ast.walk(node.target)
+                 if isinstance(n, ast.Name)}
+        self._visit_loop(node, names)
+
+    visit_AsyncFor = visit_For
+
+    def visit_While(self, node: ast.While) -> None:
+        self._visit_loop(node, set())
+
+    def _check_decorators(self, node) -> None:
+        """``@jax.jit`` / ``@functools.partial(jax.jit, ...)`` decorators:
+        the jitted function is the decorated def itself."""
+        for dec in node.decorator_list:
+            if resolve(dotted(dec), self.aliases) in ("jax.jit", "jax.pmap"):
+                self._check_missing_statics(dec, node, set())
+            elif isinstance(dec, ast.Call) and \
+                    resolve(dotted(dec.func), self.aliases) == \
+                    "functools.partial" and dec.args and \
+                    resolve(dotted(dec.args[0]), self.aliases) in \
+                    ("jax.jit", "jax.pmap"):
+                statics: set = set()
+                for kw in dec.keywords:
+                    if kw.arg in _STATIC_KWARGS:
+                        if not _is_literal(kw.value):
+                            self._flag(dec, f"`{kw.arg}` is not a literal: "
+                                            "the compile-cache key depends "
+                                            "on runtime state")
+                        statics |= {e.value for e in ast.walk(kw.value)
+                                    if isinstance(e, ast.Constant)
+                                    and isinstance(e.value, str)}
+                self._check_missing_statics(dec, node, statics)
+
+    # ---------------------------------------------------------------- jit
+    def _jit_call(self, node: ast.Call) -> Optional[ast.AST]:
+        """Return the jitted-function expression when ``node`` is a
+        ``jax.jit(...)`` or ``functools.partial(jax.jit, ...)`` call."""
+        name = resolve(dotted(node.func), self.aliases)
+        if name in ("jax.jit", "jax.pmap"):
+            return node.args[0] if node.args else None
+        if name == "functools.partial" and node.args and \
+                resolve(dotted(node.args[0]), self.aliases) in ("jax.jit",
+                                                                "jax.pmap"):
+            return node.args[1] if len(node.args) > 1 else None
+        return None
+
+    def _resolve_def(self, target: Optional[ast.AST]):
+        if isinstance(target, ast.Name):
+            for scope in reversed(self.scopes):
+                if target.id in scope:
+                    return scope[target.id]
+        return None
+
+    def visit_Call(self, node: ast.Call) -> None:
+        name = resolve(dotted(node.func), self.aliases)
+        is_jit = name in ("jax.jit", "jax.pmap") or (
+            name == "functools.partial" and node.args and
+            resolve(dotted(node.args[0]), self.aliases) in ("jax.jit",
+                                                            "jax.pmap"))
+        if is_jit:
+            target = self._jit_call(node)
+            self._check_jit_site(node, target)
+        self._check_cache_key(node)
+        self.generic_visit(node)
+
+    def _check_jit_site(self, node: ast.Call, target) -> None:
+        fn = self._resolve_def(target)
+        if self.loops:
+            what = "a lambda" if isinstance(target, ast.Lambda) else \
+                "a local def" if fn is not None else "a function"
+            self._flag(node, f"jax.jit of {what} inside a loop: a fresh "
+                             "jitted callable (and trace) per iteration -- "
+                             "hoist the jit or key an executor cache")
+        # Python-scalar closure capture of a loop variable
+        free = None
+        if isinstance(target, ast.Lambda):
+            free = _free_names(target)
+        elif fn is not None:
+            free = _free_names(fn)
+        if free:
+            leaked = free & set().union(*self.loop_targets) \
+                if self.loop_targets else set()
+            if leaked:
+                self._flag(node, "jitted function closes over loop "
+                                 f"variable(s) {sorted(leaked)}: the value "
+                                 "is baked at trace time and goes stale "
+                                 "(pass it as an argument instead)")
+        statics: set = set()
+        for kw in node.keywords:
+            if kw.arg in _STATIC_KWARGS:
+                if not _is_literal(kw.value):
+                    self._flag(node, f"`{kw.arg}` is not a literal: the "
+                                     "compile-cache key depends on runtime "
+                                     "state")
+                statics |= {e.value for e in ast.walk(kw.value)
+                            if isinstance(e, ast.Constant)
+                            and isinstance(e.value, str)}
+        if fn is not None:
+            self._check_missing_statics(node, fn, statics)
+
+    def _check_missing_statics(self, node, fn, statics: set) -> None:
+        args = fn.args
+        defaults = dict(zip([a.arg for a in args.args[-len(args.defaults):]],
+                            args.defaults)) if args.defaults else {}
+        defaults.update({a.arg: d for a, d in
+                         zip(args.kwonlyargs, args.kw_defaults) if d})
+        for a in args.args + args.kwonlyargs:
+            if a.arg in statics:
+                continue
+            ann = getattr(a.annotation, "id", None)
+            dflt = defaults.get(a.arg)
+            staticish = ann in ("bool", "str") or (
+                isinstance(dflt, ast.Constant) and
+                isinstance(dflt.value, (bool, str)))
+            if staticish:
+                self._flag(node, f"param `{a.arg}` of jitted `{fn.name}` "
+                                 "looks static (bool/str) but is not in "
+                                 "static_argnames -- it will retrace per "
+                                 "value or fail under tracing")
+
+    # --------------------------------------------------------- cache keys
+    def _key_hazards(self, container: ast.AST, key: ast.AST) -> None:
+        cname = dotted(container) or ""
+        if not _CACHE_NAME.search(cname):
+            return
+        for sub in ast.walk(key):
+            if isinstance(sub, ast.JoinedStr):
+                self._flag(sub, f"f-string in compile-cache key of "
+                                f"`{cname}`: formatting collapses distinct "
+                                "dtypes/shapes into one key -- use a tuple")
+                break
+        has_items = any(isinstance(s, ast.Call) and
+                        isinstance(s.func, ast.Attribute) and
+                        s.func.attr == "items" for s in ast.walk(key))
+        has_sorted = any(isinstance(s, ast.Call) and
+                         dotted(s.func) == "sorted" for s in ast.walk(key))
+        if has_items and not has_sorted:
+            self._flag(key, f"dict-order hazard in compile-cache key of "
+                            f"`{cname}`: `.items()` iteration order is "
+                            "insertion order -- wrap in sorted()")
+
+    def _check_cache_key(self, node: ast.Call) -> None:
+        if isinstance(node.func, ast.Attribute) and \
+                node.func.attr in ("get", "setdefault", "pop") and node.args:
+            self._key_hazards(node.func.value, node.args[0])
+
+    def visit_Assign(self, node: ast.Assign) -> None:
+        for t in node.targets:
+            if isinstance(t, ast.Subscript):
+                self._key_hazards(t.value, t.slice)
+        self.generic_visit(node)

@@ -291,6 +291,7 @@ def take_rows(plan: SolverPlan, rows, shardings=None) -> SolverPlan:
     """
     if not plan.stacked:
         raise ValueError("take_rows requires a stacked plan")
+    # repro: allow[RL001] rows is a host-side index list by contract (scheduler bookkeeping)
     idx = np.asarray(rows, dtype=np.int32)
     if idx.ndim != 1 or idx.size == 0:
         raise ValueError(f"rows must be a non-empty 1-D index sequence, got "

@@ -453,7 +453,7 @@ def _step_pndm(plan: SolverPlan, k, state: SamplerState, eps_fn: EpsFn,
             lambda st: _pndm_warmup(plan, k, st, eps_fn, hooks),
             lambda st: _pndm_tail(plan, k, st, eps_fn, hooks),
             state)
-    k = int(k)
+    k = int(k)  # repro: allow[RL001] eager path: traced k returned via lax.cond above
     if k < _N_WARMUP:
         return _pndm_warmup(plan, k, state, eps_fn, hooks)
     return _pndm_tail(plan, k, state, eps_fn, hooks)

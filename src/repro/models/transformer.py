@@ -190,6 +190,7 @@ def _apply_block(cfg: ModelConfig, bp, h, positions, *, causal, cache_b,
                                     use_pallas=use_pallas)
         h = h + out
         if new_cache_b is not None:
+            # repro: allow[RL002] KV-cache pytree keyed by trace-static layer slot, not a compile cache
             new_cache_b[f"slot{slot}"] = nc if nc is not None else c_slot
         if "cross" in sp and enc_out is not None:
             hx = L.rms_norm(h, sp["norm_x"], cfg.norm_eps)

@@ -169,9 +169,11 @@ class MetricsRegistry:
         return self._register(Histogram, name, help, edges)
 
     def get(self, name: str) -> Optional[object]:
+        # repro: allow[RL003] GIL-atomic dict read; registration is the only writer
         return self._metrics.get(name)
 
     def __contains__(self, name: str) -> bool:
+        # repro: allow[RL003] GIL-atomic membership test, same contract as get()
         return name in self._metrics
 
     def __iter__(self):

@@ -218,12 +218,17 @@ class ServeDriver:
 
     # ------------------------------------------------------------ lifecycle
     def start(self) -> "ServeDriver":
-        """Start the scheduler thread (idempotent)."""
-        if self._thread is None or not self._thread.is_alive():
-            self._stop.clear()
-            self._thread = threading.Thread(
-                target=self._run, name="deis-serve-driver", daemon=True)
-            self._thread.start()
+        """Start the scheduler thread (idempotent).
+
+        The check-then-spawn runs under ``_lock``: two concurrent first
+        ``submit()`` calls would otherwise both see ``_thread is None`` and
+        start two scheduler threads over a single-threaded engine."""
+        with self._lock:
+            if self._thread is None or not self._thread.is_alive():
+                self._stop.clear()
+                self._thread = threading.Thread(
+                    target=self._run, name="deis-serve-driver", daemon=True)
+                self._thread.start()
         return self
 
     def stop(self, timeout: Optional[float] = None) -> None:
@@ -234,10 +239,14 @@ class ServeDriver:
         spawn a second scheduler thread over a live one (the engine is
         single-threaded by contract)."""
         self._stop.set()
-        if self._thread is not None:
-            self._thread.join(timeout)
-            if not self._thread.is_alive():
-                self._thread = None
+        with self._lock:
+            thread = self._thread
+        if thread is not None:
+            thread.join(timeout)  # join outside the lock: submit() must not
+            if not thread.is_alive():  # block behind a draining scheduler
+                with self._lock:
+                    if self._thread is thread:
+                        self._thread = None
 
     def __enter__(self) -> "ServeDriver":
         return self.start()
@@ -315,10 +324,12 @@ class ServeDriver:
         write into the same one); the historical keys are kept so existing
         callers and the HTTP ``/stats`` route are unaffected."""
         eng = self.engine
+        with self._lock:
+            in_flight = len(self._streams)
         return {"ticks": eng.ticks, "executors": eng.num_executors,
                 "wasted_row_steps": eng.wasted_row_steps,
                 "joined_requests": eng.joined_requests,
-                "in_flight": len(self._streams),
+                "in_flight": in_flight,
                 "max_pending": self.max_pending,
                 "submitted": int(self._m_submitted.value),
                 "shed": int(self._m_shed.value),
@@ -363,7 +374,8 @@ class ServeDriver:
         ``row_seq_lens`` its true length (bucketed admission solves at the
         bucket edge; streamed decodes are masked back to the request)."""
         for i, uid in enumerate(event.uids):
-            stream = self._streams.get(uid)
+            with self._lock:
+                stream = self._streams.get(uid)
             if stream is None:
                 continue   # submitted directly to the engine, or finished
             row_n = event.row_steps[i] if event.row_steps else event.n_steps

@@ -1,0 +1,18 @@
+"""Known-bad RL001 fixture: one of every hot-path sync pattern."""
+# repro: hot-path
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def leaky_step(plan, k, x):
+    err = x.item()
+    jax.block_until_ready(x)
+    host = np.asarray(x)
+    print("step", k)
+    scale = float(jnp.max(x))
+    if jnp.any(x > 0):
+        x = x * scale
+    while (x > 0).all():
+        x = x - err
+    return x, host

@@ -1,0 +1,16 @@
+"""Known-good RL001 fixture: host-side bookkeeping the taint pass must
+recognize (numpy/math results, len(), coercions of already-host values)."""
+# repro: hot-path
+import math
+
+import numpy as np
+
+
+def plan_table(n):
+    ts = np.linspace(0.0, 1.0, n)
+    tab = np.asarray(ts, dtype=np.float64)
+    total = float(np.sum(tab))
+    if len(ts) > 3 and math.isfinite(total):
+        tab = tab * 2.0
+    k = int(len(ts))
+    return tab, total, k

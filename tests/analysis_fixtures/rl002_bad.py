@@ -1,0 +1,23 @@
+"""Known-bad RL002 fixture: every recompile hazard the checker knows."""
+import jax
+
+
+def make_solvers(fns, flag, run_step):
+    compiled = {}
+    for i, fn in enumerate(fns):
+        compiled[f"fn{i}"] = jax.jit(lambda x: fn(x) * i)
+    step = jax.jit(run_step, static_argnums=flag)
+    return compiled, step
+
+
+def run_step(x, interpret=False):
+    return x * 2
+
+
+def build(x):
+    step = jax.jit(run_step)
+    return step(x)
+
+
+def lookup(compiled, spec):
+    return compiled.get(tuple(spec.items()))

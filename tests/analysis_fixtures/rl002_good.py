@@ -1,0 +1,21 @@
+"""Known-good RL002 fixture: hoisted jit, literal statics, tuple cache
+keys, sorted dict iteration."""
+import functools
+
+import jax
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def run_step(x, interpret=False):
+    return x * 2
+
+
+def build(fns):
+    compiled = {}
+    for i, fn in enumerate(fns):
+        compiled[("fn", i)] = fn
+    return compiled
+
+
+def lookup(compiled, spec):
+    return compiled.get(tuple(sorted(spec.items())))

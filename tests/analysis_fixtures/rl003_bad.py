@@ -1,0 +1,25 @@
+"""Known-bad RL003 fixture: a ServeDriver breaking its ownership table
+(locked attr outside the lock, config mutated after __init__, an attr the
+table does not know about)."""
+import queue
+import threading
+
+
+class ServeDriver:
+    def __init__(self, engine):
+        self.engine = engine
+        self.max_pending = 4
+        self._lock = threading.Lock()
+        self._inbox = queue.Queue()
+        self._streams = {}
+        self._thread = None
+
+    def submit(self, request):
+        self._streams[request.uid] = request
+        self._inbox.put(request)
+        self.max_pending = 8
+        self._scratch = []
+        return request
+
+    def stats(self):
+        return len(self._streams)

@@ -1,0 +1,24 @@
+"""Known-good RL003 fixture: the same ServeDriver honoring its table."""
+import queue
+import threading
+
+
+class ServeDriver:
+    def __init__(self, engine):
+        self.engine = engine
+        self.max_pending = 4
+        self._lock = threading.Lock()
+        self._inbox = queue.Queue()
+        self._streams = {}
+        self._thread = None
+
+    def submit(self, request):
+        with self._lock:
+            self._streams[request.uid] = request
+        self._inbox.put(request)
+        return request
+
+    def stats(self):
+        with self._lock:
+            return {"in_flight": len(self._streams),
+                    "max_pending": self.max_pending}

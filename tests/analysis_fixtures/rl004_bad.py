@@ -1,0 +1,30 @@
+"""Known-bad RL004 fixture: overlapping registries, a stray modifier key,
+a builder inventing unregistered coefficient keys, and a state_specs call
+missing a SamplerState field."""
+import numpy as np
+
+_PER_STEP_COEFFS = frozenset({"ab_coeffs", "noise_scale"})
+_PER_KNOT_COEFFS = frozenset({"ts", "noise_scale"})
+_STATIC_COEFFS = frozenset({"tableau"})
+_TIME_LIKE = frozenset({"ts", "sigma_grid"})
+
+
+def _mk(name, coeffs):
+    return name, coeffs
+
+
+def plan_demo(n):
+    coeffs = {"ab_coeffs": np.zeros((n, 3)), "mystery": np.ones(n)}
+    coeffs["tableau"] = np.eye(3)
+    coeffs.update(extra_gain=np.ones(n))
+    return _mk("demo", coeffs)
+
+
+class SamplerState:
+    x: object
+    hist: object
+    key: object
+
+
+def state_specs(mesh):
+    return SamplerState(x="data", hist="data")

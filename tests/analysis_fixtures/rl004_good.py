@@ -1,0 +1,29 @@
+"""Known-good RL004 fixture: disjoint registries, a modifier that is a
+subset of a primary, a builder using only registered keys, and a complete
+state_specs."""
+import numpy as np
+
+_PER_STEP_COEFFS = frozenset({"ab_coeffs"})
+_PER_KNOT_COEFFS = frozenset({"ts"})
+_STATIC_COEFFS = frozenset({"tableau"})
+_TIME_LIKE = frozenset({"ts"})
+
+
+def _mk(name, coeffs):
+    return name, coeffs
+
+
+def plan_demo(n):
+    coeffs = {"ab_coeffs": np.zeros((n, 3)), "ts": np.linspace(0.0, 1.0, n)}
+    coeffs["tableau"] = np.eye(3)
+    return _mk("demo", coeffs)
+
+
+class SamplerState:
+    x: object
+    hist: object
+    key: object
+
+
+def state_specs(mesh):
+    return SamplerState(x="data", hist="data", key=None)

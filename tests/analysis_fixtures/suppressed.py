@@ -1,0 +1,9 @@
+"""Suppression fixture: a real RL001 finding carrying a justified allow
+comment -- reported as [allowed], does not fail the run."""
+# repro: hot-path
+import numpy as np
+
+
+def boundary(x):
+    # repro: allow[RL001] boundary decode: the solve is already complete here
+    return np.asarray(x)

@@ -38,3 +38,17 @@ except ImportError:
 @pytest.fixture(scope="session")
 def rng_key():
     return jax.random.PRNGKey(0)
+
+
+@pytest.fixture
+def no_implicit_transfers():
+    """Fail the test on any implicit device<->host transfer.
+
+    The dynamic twin of the RL001 static lint: inside this fixture jax
+    raises on implicit transfers (e.g. ``bool(x > 0)``, ``x + np_array``)
+    while explicit ones (``jax.device_get``, ``jnp.asarray(np_arr)``) stay
+    allowed. Build inputs and jit BEFORE requesting the guard (list this
+    fixture after any prep fixtures); fetch results with ``jax.device_get``.
+    """
+    with jax.transfer_guard("disallow"):
+        yield

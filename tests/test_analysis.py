@@ -1,0 +1,95 @@
+"""repro.analysis: fixture-driven checker contracts, suppression syntax,
+CLI exit codes, the bench record, and the live-tree self-check (the
+committed src/ must stay clean modulo its justified allow comments)."""
+import json
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import RULES, analyze, main, write_bench
+
+FIX = Path(__file__).parent / "analysis_fixtures"
+SRC = Path(__file__).resolve().parents[1] / "src"
+
+# (rule, fixture stem, expected violation count in the known-bad file);
+# counts are exact so a checker that silently stops firing breaks loudly.
+CASES = [("RL001", "rl001", 7), ("RL002", "rl002", 6),
+         ("RL003", "rl003", 4), ("RL004", "rl004", 5)]
+
+
+@pytest.mark.parametrize("rule,stem,expected", CASES)
+def test_bad_fixture_flags(rule, stem, expected):
+    report = analyze([str(FIX / f"{stem}_bad.py")])
+    assert report.exit_code == 1
+    assert report.counts()[rule] == expected
+    assert {v.rule for v in report.active} == {rule}
+
+
+@pytest.mark.parametrize("rule,stem,expected", CASES)
+def test_good_fixture_clean(rule, stem, expected):
+    report = analyze([str(FIX / f"{stem}_good.py")])
+    assert report.exit_code == 0 and not report.violations
+
+
+def test_suppression_allows_but_reports():
+    report = analyze([str(FIX / "suppressed.py")])
+    assert report.exit_code == 0
+    assert [v.rule for v in report.allowed] == ["RL001"]
+    assert "[allowed]" in report.human()
+
+
+def test_cli_exit_codes(tmp_path, capsys):
+    assert main([str(FIX / "rl001_good.py")]) == 0
+    assert main([str(FIX / "rl001_bad.py")]) == 1
+    assert main(["--rules", "NOPE", str(FIX)]) == 2
+    assert main([str(tmp_path / "missing.txt")]) == 2
+    capsys.readouterr()
+
+
+def test_cli_rule_subset(capsys):
+    # RL001 findings are invisible to an RL002-only run
+    assert main(["--rules", "RL002", str(FIX / "rl001_bad.py")]) == 0
+    capsys.readouterr()
+
+
+def test_cli_json(capsys):
+    main(["--json", str(FIX / "rl003_bad.py")])
+    data = json.loads(capsys.readouterr().out)
+    assert data["counts"]["RL003"] == 4
+    v = data["violations"][0]
+    assert {"rule", "path", "line", "col", "message", "allowed"} <= set(v)
+
+
+def test_cli_list_rules(capsys):
+    assert main(["--list-rules"]) == 0
+    out = capsys.readouterr().out
+    assert all(rule in out for rule in RULES)
+
+
+def test_syntax_error_is_rl000(tmp_path):
+    bad = tmp_path / "broken.py"
+    bad.write_text("def oops(:\n")
+    report = analyze([str(bad)])
+    assert report.exit_code == 1
+    assert [v.rule for v in report.active] == ["RL000"]
+
+
+def test_bench_record(tmp_path):
+    out = tmp_path / "BENCH_static.json"
+    report = analyze([str(FIX / "rl002_bad.py")])
+    write_bench(report, str(out), ["fixtures"])
+    rec = json.loads(out.read_text())
+    m = rec["metrics"]["static.RL002.violations"]
+    assert m["value"] == 6 and m["ratchet"] and m["tol"] == 0.0
+    assert m["direction"] == "lower"
+    assert rec["metrics"]["static.files"]["value"] == 1
+    assert rec["meta"]["rules"] == list(RULES)
+
+
+def test_live_tree_clean(capsys):
+    """The committed src/ passes the analyzer -- same invocation as CI's
+    lint job. Any new violation must be fixed or carry a justified
+    ``# repro: allow[RULE]``."""
+    code = main([str(SRC)])
+    out = capsys.readouterr().out
+    assert code == 0, out

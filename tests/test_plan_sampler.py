@@ -376,3 +376,59 @@ def test_sample_with_tracer_matches_untraced(name):
         np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
     assert tr.span_names() == ["sample.step"]
     assert tr.registry.get("trace_sample.step_seconds").count == plan.n_steps
+
+
+# ------------------------------------- transfer guard: dynamic twin of RL001
+# One solver per stepper family (ab/rk/stochastic/pndm): the full solve must
+# run without a single implicit device<->host transfer -- the runtime check
+# backing the static host-sync lint (see docs/static_analysis.md).
+GUARD_NAMES = ["tab3", "rho_heun", "em", "pndm"]
+
+
+@pytest.fixture(scope="module")
+def guard_prep():
+    """Everything host-touching happens here, OUTSIDE the guard: plan
+    construction (numpy coefficient tables), input materialization, jit
+    wrapping, device-resident int32 step indices, and the unguarded
+    reference solve. Tests then run only jitted device work under the
+    guard and fetch results with an explicit ``jax.device_get``."""
+    eps, xT = _problem()
+    out = {}
+    for name in GUARD_NAMES:
+        ts = TS if name != "pndm" else get_timesteps(SDE, 8, "uniform")
+        plan = make_plan(name, SDE, ts)
+        jit_step = jax.jit(lambda k, st, _p=plan: step(_p, k, st, eps))
+        jit_sample = jax.jit(lambda _p=plan: sample(_p, eps, xT, KEY))
+        out[name] = {
+            "state0": init_state(plan, xT, KEY),
+            "jit_step": jit_step,
+            "jit_sample": jit_sample,
+            "ks": [jnp.int32(k) for k in range(plan.n_steps)],
+            "want": np.asarray(sample(plan, eps, xT, KEY)),
+        }
+    return out
+
+
+@pytest.mark.parametrize("name", GUARD_NAMES)
+def test_sample_no_implicit_transfers(name, guard_prep, no_implicit_transfers):
+    """A jitted full solve compiles and runs entirely on-device: any stray
+    ``float()``/``bool()``/np coercion in the plan/sampler path would raise
+    under the guard (including during the cold compile, which happens
+    inside it)."""
+    p = guard_prep[name]
+    got = jax.device_get(p["jit_sample"]())
+    np.testing.assert_allclose(got, p["want"], rtol=1e-7, atol=1e-9)
+
+
+@pytest.mark.parametrize("name", GUARD_NAMES)
+def test_step_loop_no_implicit_transfers(name, guard_prep,
+                                         no_implicit_transfers):
+    """The serving-style loop -- one jitted ``step`` per k with k as a
+    device int32 -- stays transfer-free across every step of every stepper
+    family, and lands on the same x_0 as the fused solve."""
+    p = guard_prep[name]
+    st = p["state0"]
+    for k in p["ks"]:
+        st = p["jit_step"](k, st)
+    got = jax.device_get(st.x)
+    np.testing.assert_allclose(got, p["want"], rtol=1e-7, atol=1e-9)
