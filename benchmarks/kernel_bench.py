@@ -1,14 +1,17 @@
-"""Kernel microbench: Pallas (interpret) vs jnp reference -- correctness delta
-+ structural roofline terms (bytes/flops per call derived analytically; CPU
-wall-time of interpret mode is NOT a TPU proxy and is reported only as
-us_per_call for the harness contract).
+"""Kernel microbench: Pallas vs jnp reference -- correctness delta +
+structural roofline terms (bytes/flops per call derived analytically).
+
+Kernel calls pass ``interpret=None``, resolving through the per-kernel
+capability table: compiled Mosaic/Triton timings on TPU/GPU, the
+interpreter only on CPU (whose wall-time is NOT a hardware proxy and is
+reported only as us_per_call for the harness contract).
 
 ``main`` writes a ``BENCH_kernels.json`` perf-trajectory record via
 ``repro.obs.bench``: the analytic roofline terms ratchet at tol 0 (they are
 pure functions of the problem shapes -- drift means the kernel's data
 movement or flop count changed), the kernel-vs-reference error ratchets with
 a generous relative tolerance (catches real numerics regressions without
-tripping on cross-version float noise), and interpret-mode wall time rides
+tripping on cross-version float noise), and backend-resolved wall time rides
 along unratcheted."""
 import jax
 import jax.numpy as jnp
@@ -30,7 +33,8 @@ def run(quick: bool = False):
     hist = jax.random.normal(ks[1], (r, m, d))
     psi = jnp.float32(0.95)
     coeffs = jax.random.normal(ks[2], (r,), jnp.float32)
-    out_k, us_k = timed(lambda: ops.deis_step(x, hist, psi, coeffs, interpret=True))
+    out_k, us_k = timed(lambda: ops.deis_step(x, hist, psi, coeffs,
+                                              interpret=None))
     out_r, us_r = timed(lambda: ref.deis_step_ref(x, hist, psi, coeffs))
     bytes_moved = 4 * (m * d * (r + 2))  # read x+hist, write out
     rows.append({"table": "kernels", "kernel": "deis_step",
@@ -45,7 +49,7 @@ def run(quick: bool = False):
     k2 = jax.random.normal(ks[1], (b, s, h, dd))
     v = jax.random.normal(ks[2], (b, s, h, dd))
     out_k, us_k = timed(lambda: ops.flash_attention(q, k2, v, blk_q=64, blk_k=64,
-                                                    interpret=True))
+                                                    interpret=None))
     out_r, _ = timed(lambda: ref.flash_attention_ref(q, k2, v))
     flops = 4.0 * b * h * s * s * dd
     rows.append({"table": "kernels", "kernel": "flash_attention",
@@ -61,7 +65,7 @@ def run(quick: bool = False):
     B = jax.random.normal(ks[2], (b, s, n))
     C = jax.random.normal(ks[3], (b, s, n))
     (y_k, st_k), us_k = timed(lambda: ops.ssd_scan(x, a, B, C, chunk=64,
-                                                   interpret=True))
+                                                   interpret=None))
     (y_r, st_r), _ = timed(lambda: ref.ssd_scan_ref(x, a, B, C))
     chunk = 64
     flops = 2.0 * b * h * (s / chunk) * (chunk * chunk * n + chunk * chunk * p

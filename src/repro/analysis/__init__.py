@@ -1,6 +1,6 @@
 """repro.analysis -- repo-specific static analysis for the DEIS stack.
 
-Four AST-based checkers (stdlib ``ast``, no third-party deps) mechanize
+Five AST-based checkers (stdlib ``ast``, no third-party deps) mechanize
 the invariants the repo previously defended only by convention:
 
 * **RL001** host-sync lint: no ``.item()`` / ``block_until_ready`` /
@@ -15,6 +15,10 @@ the invariants the repo previously defended only by convention:
 * **RL004** plan-leaf guard: coefficient keys built by ``plan_*`` builders
   must be classifiable by ``core/plan``'s role registries and covered by
   the sharding specs.
+* **RL005** interpret-default guard: no jitted kernel signature may
+  default ``interpret=True`` -- the literal that once shipped the Pallas
+  interpreter to backends that could compile (default ``None``, resolve
+  through ``repro.kernels.runtime.default_interpret``).
 
 Run ``python -m repro.analysis src/`` (CI's lint job does, ratcheting the
 per-rule counts via ``BENCH_static.json``). Suppress an intentional site

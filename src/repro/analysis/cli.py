@@ -17,12 +17,14 @@ from typing import Optional, Sequence
 
 from .base import Checker, FileContext, Violation
 from .host_sync import HostSyncChecker
+from .interpret_default import InterpretDefaultChecker
 from .locks import LockDisciplineChecker
 from .plan_leaves import PlanLeafChecker
 from .recompile import RecompileChecker
 
 CHECKERS: tuple[Checker, ...] = (HostSyncChecker(), RecompileChecker(),
-                                 LockDisciplineChecker(), PlanLeafChecker())
+                                 LockDisciplineChecker(), PlanLeafChecker(),
+                                 InterpretDefaultChecker())
 RULES = tuple(c.rule for c in CHECKERS)
 
 _SKIP_DIRS = {"__pycache__", ".git", ".venv", "node_modules"}
@@ -125,7 +127,8 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
         prog="python -m repro.analysis",
         description="repo-specific static analysis "
                     "(RL001 host-sync, RL002 recompile-hazard, "
-                    "RL003 lock-discipline, RL004 plan-leaf)")
+                    "RL003 lock-discipline, RL004 plan-leaf, "
+                    "RL005 interpret-default)")
     ap.add_argument("paths", nargs="*", default=["src"],
                     help="files or directories (default: src)")
     ap.add_argument("--rules", help="comma-separated rule subset "

@@ -108,7 +108,7 @@ OWNERSHIP = {
                 "aging_ticks", "compaction", "join", "seq_len_buckets",
                 "mesh", "_mesh_key", "_data_size", "_chunk_cap", "params",
                 "_params_exec", "enforce_deadlines", "retire", "metrics",
-                "tracer"),
+                "tracer", "fused"),
         scheduler=("_plans", "_compiled", "_pending", "_active", "_arrivals",
                    "_boundary_results"),
         atomic=("_m_*", "_g_*", "_h_*"),

@@ -1,0 +1,112 @@
+"""RL005 -- ``interpret=True`` literal-default lint for jitted kernels.
+
+The bug class this kills: a Pallas kernel wrapper grows an
+``interpret: bool = True`` default during bring-up (interpreter mode works
+everywhere), ships, and then silently runs the 100x-slower interpreter on
+hardware that could compile it. It happened once to ``deis_step`` and the
+default then spread by copy-paste into ``flash_attention``/``ssd_scan``'s
+jitted signatures.
+
+The rule: a jitted function (``@jax.jit``/``@jax.pmap`` decorated, the
+``functools.partial(jax.jit, ...)`` decorator form, or a local def passed
+to a ``jax.jit(...)`` call) must not default an ``interpret``-flavored
+parameter to a literal ``True``. The correct shape is ``interpret=None``
+resolved at call time through the per-kernel capability table
+(:func:`repro.kernels.runtime.default_interpret`) -- compiled wherever a
+lowering exists, interpreter only as the fallback. Marking the parameter
+static does not excuse the default: the cache key is fine, the VALUE is
+the bug.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, Sequence
+
+from .base import Checker, FileContext, Violation, dotted, import_aliases, resolve
+
+_PARAM_NAMES = ("interpret",)
+
+
+def _interpret_true_params(fn) -> list:
+    """``interpret``-flavored params of ``fn`` defaulting to literal True."""
+    args = fn.args
+    defaults = dict(zip([a.arg for a in args.args[-len(args.defaults):]],
+                        args.defaults)) if args.defaults else {}
+    defaults.update({a.arg: d for a, d in
+                     zip(args.kwonlyargs, args.kw_defaults) if d})
+    hits = []
+    for a in args.args + args.kwonlyargs:
+        if a.arg not in _PARAM_NAMES:
+            continue
+        dflt = defaults.get(a.arg)
+        if isinstance(dflt, ast.Constant) and dflt.value is True:
+            hits.append(a.arg)
+    return hits
+
+
+class InterpretDefaultChecker(Checker):
+    rule = "RL005"
+    title = "interpret=True literal default in a jitted kernel signature"
+
+    def check(self, ctxs: Sequence[FileContext]) -> Iterable[Violation]:
+        for ctx in ctxs:
+            if ctx.tree is not None:
+                yield from _Scan(self, ctx).run()
+
+
+class _Scan(ast.NodeVisitor):
+    def __init__(self, checker: InterpretDefaultChecker, ctx: FileContext):
+        self.checker = checker
+        self.ctx = ctx
+        self.aliases = import_aliases(ctx.tree)
+        self.scopes: list[dict] = [{}]          # name -> FunctionDef
+        self.out: list[Violation] = []
+
+    def run(self) -> list[Violation]:
+        self.visit(self.ctx.tree)
+        return self.out
+
+    def _flag(self, node, fn) -> None:
+        for name in _interpret_true_params(fn):
+            self.out.append(self.checker.violation(
+                self.ctx, node,
+                f"jitted `{fn.name}` defaults `{name}=True`: the kernel "
+                "silently runs the interpreter on backends that could "
+                "compile it -- default None and resolve through the "
+                "per-kernel capability table"))
+
+    def _is_jit_name(self, node) -> bool:
+        return resolve(dotted(node), self.aliases) in ("jax.jit", "jax.pmap")
+
+    def visit_FunctionDef(self, node) -> None:
+        self.scopes[-1][node.name] = node
+        for dec in node.decorator_list:
+            if self._is_jit_name(dec):
+                self._flag(node, node)
+            elif isinstance(dec, ast.Call) and (
+                    self._is_jit_name(dec.func) or
+                    (resolve(dotted(dec.func), self.aliases) ==
+                     "functools.partial" and dec.args and
+                     self._is_jit_name(dec.args[0]))):
+                self._flag(node, node)
+        self.scopes.append({})
+        self.generic_visit(node)
+        self.scopes.pop()
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+    def visit_Call(self, node: ast.Call) -> None:
+        # jax.jit(fn) / functools.partial(jax.jit, fn) over a resolvable def
+        target = None
+        if self._is_jit_name(node.func) and node.args:
+            target = node.args[0]
+        elif resolve(dotted(node.func), self.aliases) == \
+                "functools.partial" and node.args and \
+                self._is_jit_name(node.args[0]) and len(node.args) > 1:
+            target = node.args[1]
+        if isinstance(target, ast.Name):
+            for scope in reversed(self.scopes):
+                if target.id in scope:
+                    self._flag(node, scope[target.id])
+                    break
+        self.generic_visit(node)

@@ -26,7 +26,8 @@ from .schedules import get_timesteps, SCHEDULES
 from .coeffs import (ab_coefficients, ddim_coefficients_vp,
                      eps_norm_profile, naive_ei_coefficients,
                      sn_ab_coefficients, AB_WEIGHTS)
-from .plan import (SolverPlan, inert_row, join_rows, make_plan, pad_plan,
+from .plan import (SolverPlan, cached_make_plan, inert_row, join_rows,
+                   make_plan, pad_plan,
                    plan_ab, plan_dpm_multistep, plan_rk, plan_ddim,
                    plan_euler, plan_em, plan_ipndm, plan_pndm, plan_scire,
                    plan_seeds, plan_sndeis, solver_stages, stack_plans,
@@ -43,7 +44,8 @@ __all__ = [
     "get_timesteps", "SCHEDULES",
     "ab_coefficients", "ddim_coefficients_vp", "eps_norm_profile",
     "naive_ei_coefficients", "sn_ab_coefficients", "AB_WEIGHTS",
-    "SolverPlan", "inert_row", "join_rows", "make_plan", "pad_plan",
+    "SolverPlan", "cached_make_plan", "inert_row", "join_rows", "make_plan",
+    "pad_plan",
     "plan_ab", "plan_dpm_multistep", "plan_rk", "plan_ddim", "plan_euler",
     "plan_em", "plan_ipndm", "plan_pndm", "plan_scire", "plan_seeds",
     "plan_sndeis", "solver_stages", "stack_plans", "take_rows",

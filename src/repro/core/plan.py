@@ -832,3 +832,48 @@ def make_plan(name: str, sde: SDE, ts, **kw) -> SolverPlan:
     if n == "pndm":
         return plan_pndm(sde, ts, error_estimate=ee)
     raise ValueError(f"unknown solver {name!r}")
+
+
+# ------------------------------------------------- plan coefficient cache
+# Plans are pure functions of (solver name, SDE parameters, grid, builder
+# kwargs): the float64 host precompute (Vandermonde solves, phi integrals,
+# quadrature) is deterministic, and the result is an immutable pytree every
+# consumer treats as read-only (all splice primitives go through
+# dataclasses.replace). Memoizing moves plan construction off the serving
+# hot path: an engine's _plan() hits this cache, so admission of a known
+# (solver, nfe, eta) costs a dict lookup, not a coefficient solve.
+
+_PLAN_CACHE: dict = {}
+
+
+def _sde_fingerprint(sde):
+    """Hashable identity of an SDE's parameters, or None when the SDE is
+    not a plain dataclass (then caching would risk keying on stale state)."""
+    if dataclasses.is_dataclass(sde) and not isinstance(sde, type):
+        try:
+            items = sorted(dataclasses.asdict(sde).items())
+        except TypeError:
+            return None
+        if any(not isinstance(v, (int, float, str, bool, type(None)))
+               for _k, v in items):
+            return None
+        return (type(sde).__name__, tuple(items))
+    return None
+
+
+def cached_make_plan(name: str, sde: SDE, ts, **kw) -> SolverPlan:
+    """:func:`make_plan` memoized on ``(family, schedule fingerprint, grid,
+    kwargs)``.
+
+    Falls back to an uncached build when the SDE has no stable fingerprint
+    (non-dataclass or non-scalar fields). Cached plans are shared objects --
+    callers must never mutate them (use ``dataclasses.replace``)."""
+    fp = _sde_fingerprint(sde)
+    if fp is None:
+        return make_plan(name, sde, ts, **kw)
+    key = (name.lower(), fp, np.asarray(ts, np.float64).tobytes(),
+           tuple(sorted(kw.items())))
+    plan = _PLAN_CACHE.get(key)
+    if plan is None:
+        plan = _PLAN_CACHE[key] = make_plan(name, sde, ts, **kw)
+    return plan

@@ -54,9 +54,9 @@ import jax.numpy as jnp
 # masked until first trace) -- but guarded: only fused plans need Pallas, so
 # an environment without it can still import and run every unfused plan.
 try:
-    from ..kernels.ops import deis_step as _fused_deis_step
+    from ..kernels.ops import fused_ab_step as _fused_ab_step
 except ImportError as _e:  # pragma: no cover - depends on jax build
-    _fused_deis_step = None
+    _fused_ab_step = None
     _FUSED_IMPORT_ERROR = _e
 
 from .plan import SolverPlan
@@ -300,32 +300,58 @@ def _step_ab(plan: SolverPlan, k, state: SamplerState, eps_fn: EpsFn,
         Cw = Cw * nu
     eps = _apply_eps(hooks, x, t_k, eps_fn(x, t_k))
     hist = jnp.concatenate([eps[None], state.hist[:-1]], axis=0)
-    if plan.fused:
-        if stk:
-            raise NotImplementedError("fused Pallas path does not support "
-                                      "stacked plans (per-request psi/C)")
-        if _fused_deis_step is None:
-            raise ImportError("plan.fused=True requires the Pallas deis_step "
-                              "kernel, which failed to import"
-                              ) from _FUSED_IMPORT_ERROR
-        flat = x.reshape(-1, x.shape[-1]) if x.ndim > 1 else x.reshape(1, -1)
-        hflat = hist.reshape(hist.shape[0], *flat.shape)
-        out = _fused_deis_step(flat, hflat, psi.astype(jnp.float32),
-                               Cw.astype(jnp.float32))
-        x_new = out.reshape(x.shape)
-    else:
-        x_new = bcast(psi, x) * x + _comb(Cw, hist, stk)
+    s_coef = noise = None
     if plan.stochastic:
-        s = _at_step(c["s"], k, stk)
-        x_new = x_new + bcast(s, x) * _noise_like(sub, x, stk)
+        s_coef = _at_step(c["s"], k, stk)
+        noise = _noise_like(sub, x, stk)
+    Ew = live = None
     if "E" in c:
         Ew = _at_step(c["E"], k, stk)
         live = jnp.any(Ew != 0, axis=-1)
         if "nu" in c:
             Ew = Ew * nu          # the pair difference is normalized too
-        err = _update_err(_comb(Ew, hist, stk), live, state.err, stk)
+    if plan.fused:
+        if _fused_ab_step is None:
+            raise ImportError("plan.fused=True requires the Pallas deis_step "
+                              "kernel, which failed to import"
+                              ) from _FUSED_IMPORT_ERROR
+        # Flatten to the kernel's (R, M, D) layout. Unstacked solves run as a
+        # one-row stack, so solo and stacked groups share the same per-block
+        # arithmetic (the serving bitwise-vs-solo invariant). Noise draw and
+        # error-pair combination ride in the same kernel call: one HBM round
+        # trip instead of r+3.
+        n_rows = x.shape[0] if stk else 1
+        inner = x.shape[1:] if stk else x.shape
+        m = 1
+        for dim in inner[:-1]:
+            m *= dim
+        d = inner[-1] if inner else 1
+        xf = x.reshape(n_rows, m, d)
+        hf = hist.reshape(hist.shape[0], n_rows, m, d)
+        if stk:
+            psi_r, C_r, s_r, E_r = psi, Cw, s_coef, Ew
+        else:
+            psi_r = jnp.reshape(psi, (1,))
+            C_r = Cw[None]
+            s_r = jnp.reshape(s_coef, (1,)) if s_coef is not None else None
+            E_r = Ew[None] if Ew is not None else None
+        n_r = noise.reshape(xf.shape) if noise is not None else None
+        out, err_raw = _fused_ab_step(xf, hf, psi_r, C_r, s=s_r, noise=n_r,
+                                      err_coeffs=E_r)
+        x_new = out.reshape(x.shape)
+        if Ew is not None:
+            raw = err_raw if stk else err_raw[0]
+            err = jnp.where(live, raw.astype(state.err.dtype), state.err)
+        else:
+            err = state.err
     else:
-        err = state.err
+        x_new = bcast(psi, x) * x + _comb(Cw, hist, stk)
+        if plan.stochastic:
+            x_new = x_new + bcast(s_coef, x) * noise
+        if Ew is not None:
+            err = _update_err(_comb(Ew, hist, stk), live, state.err, stk)
+        else:
+            err = state.err
     return SamplerState(x=x_new, hist=hist, key=key, k=state.k + 1, err=err)
 
 

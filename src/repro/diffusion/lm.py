@@ -65,17 +65,24 @@ def diffusion_loss(params, cfg: ModelConfig, sde: SDE, tokens, key, *,
 
 
 def make_eps_fn(params, cfg: ModelConfig, *, prefix=None, frames=None,
-                use_pallas: bool = False, unroll: int = 1):
-    """eps_theta(x, t) closure for the DEIS solvers; x: (B, S, D), t scalar."""
+                use_pallas: bool = False, unroll: int = 1, valid_len=None):
+    """eps_theta(x, t) closure for the DEIS solvers; x: (B, S, D), t scalar.
+
+    ``valid_len``: optional (B,) int per-row true length for bucket-padded
+    batches -- threaded to attention so a row's denoising trajectory does
+    not depend on the bucketed tail padding."""
     def eps_fn(x, t):
         b = x.shape[0]
         t_b = jnp.broadcast_to(t, (b,)).astype(jnp.float32)
         xin = x
+        vl = valid_len
         if cfg.arch_type == "vlm" and prefix is not None:
             xin = jnp.concatenate([prefix.astype(x.dtype), x], axis=1)
+            if vl is not None:
+                vl = vl + prefix.shape[1]   # prefix positions are all valid
         out = T.forward(params, cfg, embeds=xin, t_cond=t_b, mode="train",
                         causal=False, frames=frames, use_pallas=use_pallas,
-                        unroll=unroll)
+                        unroll=unroll, valid_len=vl)
         eps = out["eps"].astype(x.dtype)
         if cfg.arch_type == "vlm" and prefix is not None:
             eps = eps[:, prefix.shape[1]:]
@@ -129,7 +136,7 @@ def request_keys(seeds) -> jax.Array:
 
 
 def init_sample_state(cfg: ModelConfig, plan: SolverPlan, keys, *,
-                      seq_len: int, prior_std: float):
+                      seq_len: int, prior_std: float, valid_lens=None):
     """Build the stacked ``SamplerState`` for a group of requests.
 
     ``plan`` must be a stacked plan (:func:`repro.core.plan.stack_plans`) and
@@ -137,12 +144,26 @@ def init_sample_state(cfg: ModelConfig, plan: SolverPlan, keys, *,
     is split into (prior, solve) exactly as the one-shot path splits its
     single key; the prior is drawn per request with shape ``(seq_len,
     d_model)`` so row ``i`` is bit-identical to a single-request solve.
+
+    ``valid_lens``: optional sequence of per-row true lengths (<= seq_len)
+    for bucket-padded groups. Row ``i``'s prior is drawn at its TRUE length
+    and zero-padded to ``seq_len``, so the prior (and hence the whole
+    deterministic trajectory, with attention masking the padded keys) is
+    independent of which bucket the request landed in.
     """
     split = jax.vmap(jax.random.split)(keys)          # (R, 2, 2)
     k_prior, k_solve = split[:, 0], split[:, 1]
-    x_T = jax.vmap(
-        lambda kk: jax.random.normal(kk, (seq_len, cfg.d_model), jnp.float32)
-    )(k_prior) * prior_std
+    if valid_lens is not None and any(int(v) != seq_len for v in valid_lens):
+        rows = []
+        for i, lv in enumerate(valid_lens):
+            lv = int(lv)
+            r = jax.random.normal(k_prior[i], (lv, cfg.d_model), jnp.float32)
+            rows.append(jnp.pad(r, ((0, seq_len - lv), (0, 0))))
+        x_T = jnp.stack(rows) * prior_std
+    else:
+        x_T = jax.vmap(
+            lambda kk: jax.random.normal(kk, (seq_len, cfg.d_model), jnp.float32)
+        )(k_prior) * prior_std
     return SAMPLER.init_state(plan, x_T, k_solve)
 
 

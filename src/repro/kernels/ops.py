@@ -1,45 +1,44 @@
-"""Jit'd public wrappers for the Pallas kernels.
+"""Public wrappers for the Pallas kernels.
 
-``interpret=None`` resolves per kernel from the backend at call time,
-compiled wherever that kernel HAS a compiled lowering:
+``interpret=None`` resolves per kernel through the shared capability table
+in :mod:`repro.kernels.runtime` (``default_interpret(kernel)``): compiled
+wherever that kernel HAS a compiled lowering, interpreter otherwise. All
+three kernels are now written against the generic Pallas API -- no
+``pltpu`` scratch, no cross-grid-step state carry -- so all three lower to
+Mosaic on TPU and Triton on GPU and interpret only on CPU.
 
-* ``deis_step`` is written against the generic Pallas API, which lowers to
-  Mosaic on TPU and Triton on GPU -- interpret mode only on CPU.
-* ``flash_attention`` / ``ssd_scan`` use TPU-specific constructs (pltpu
-  scratch shapes / memory spaces) with no Triton lowering -- compiled on
-  TPU, interpret mode everywhere else.
-
-The old shared default interpreted on every non-TPU backend, which silently
-made the "fused" deis_step slower on GPU than the un-fused XLA form it
-exists to beat.
+(The history this layer guards against: ``deis_step`` once defaulted to
+``interpret=True`` everywhere, then ``flash_attention``/``ssd_scan`` kept
+the same literal default in their jitted signatures while this module
+blanket-interpreted them off-TPU. RL005 lints the bug class; the capability
+table is the single place the resolution lives.)
 """
 from __future__ import annotations
 
-import jax
-
 from .deis_step import deis_step as _deis_step
+from .deis_step import fused_ab_step as _fused_ab_step
 from .flash_attention import flash_attention as _flash_attention
+from .runtime import default_interpret  # noqa: F401  (re-export)
 from .ssd_scan import ssd_scan as _ssd_scan
 
 
-def _tpu_only_interpret() -> bool:
-    # for kernels whose compiled form is Mosaic-only: interpret off-TPU
-    return jax.default_backend() != "tpu"
-
-
 def deis_step(x, eps_hist, psi, coeffs, *, interpret=None):
-    # interpret=None resolves inside the kernel (default_interpret():
-    # compiled everywhere a lowering exists, interpret only on CPU)
+    # interpret=None resolves inside the kernel via the capability table
     return _deis_step(x, eps_hist, psi, coeffs, interpret=interpret)
+
+
+def fused_ab_step(x, hist, psi, coeffs, *, s=None, noise=None,
+                  err_coeffs=None, interpret=None):
+    # stacked serving entry: per-row [psi, C, s?, E?] + optional noise/err
+    return _fused_ab_step(x, hist, psi, coeffs, s=s, noise=noise,
+                          err_coeffs=err_coeffs, interpret=interpret)
 
 
 def flash_attention(q, k, v, *, causal=True, window=0, blk_q=128, blk_k=128,
                     interpret=None):
-    return _flash_attention(
-        q, k, v, causal=causal, window=window, blk_q=blk_q, blk_k=blk_k,
-        interpret=_tpu_only_interpret() if interpret is None else interpret)
+    return _flash_attention(q, k, v, causal=causal, window=window,
+                            blk_q=blk_q, blk_k=blk_k, interpret=interpret)
 
 
 def ssd_scan(x, a, B, C, *, chunk=128, interpret=None):
-    return _ssd_scan(x, a, B, C, chunk=chunk,
-                     interpret=_tpu_only_interpret() if interpret is None else interpret)
+    return _ssd_scan(x, a, B, C, chunk=chunk, interpret=interpret)

@@ -26,7 +26,9 @@ def flash_attention_ref(q, k, v, *, causal=True, window=0):
         v = jnp.repeat(v, n_rep, axis=2)
     logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
                         k.astype(jnp.float32)) / math.sqrt(d)
-    qp = jnp.arange(sq)[:, None]
+    # query positions offset so the LAST query aligns with the last key
+    # (cross-attention / KV-cache decode with sq != sk)
+    qp = (k.shape[1] - sq) + jnp.arange(sq)[:, None]
     kp = jnp.arange(k.shape[1])[None, :]
     mask = jnp.ones((sq, k.shape[1]), bool)
     if causal:

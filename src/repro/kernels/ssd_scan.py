@@ -1,8 +1,10 @@
-"""Mamba2 SSD chunked-scan kernel (arXiv:2405.21060), TPU-native.
+"""Mamba2 SSD chunked-scan kernel (arXiv:2405.21060), portable Pallas.
 
-Per (batch, head) the grid walks chunks SEQUENTIALLY (minor grid dim); the
-running state h in R^{P x N} lives in VMEM scratch across grid steps. Each
-chunk does three MXU matmuls entirely in VMEM:
+Per (batch, head) grid instance the kernel walks chunks with an in-kernel
+``fori_loop``; the running state h in R^{P x N} is the loop carry, not VMEM
+scratch carried across grid steps (the grid axis is parallel-safe, so the
+same body lowers to Mosaic on TPU and Triton on GPU). Each chunk does three
+MXU matmuls entirely on-chip:
 
     scores = C B^T               (L x L)
     y_intra = (scores . decay . tril) x        (L x P)
@@ -10,7 +12,7 @@ chunk does three MXU matmuls entirely in VMEM:
     h_new   = a_chunk h_prev + (B . decay_out)^T x
 
 This is the hardware adaptation of the paper's CUDA selective-scan: no warp
-shuffles -- the sequential dependence is carried by the grid, the quadratic
+shuffles -- the sequential dependence is carried by the loop, the quadratic
 within-chunk work feeds the systolic MXU, and the (L,L,H) decay tensor that
 bloats the XLA path (see EXPERIMENTS.md §Perf jamba iteration) never leaves
 VMEM.
@@ -22,60 +24,79 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from .runtime import default_interpret as _resolve_interpret
 
 
-def _kernel(x_ref, a_ref, b_ref, c_ref, y_ref, state_out_ref, h_scr, *,
+def default_interpret() -> bool:
+    """Compiled by default; interpret only where Pallas cannot lower.
+
+    Resolved through the shared per-kernel capability table
+    (:func:`repro.kernels.runtime.default_interpret`).
+    """
+    return _resolve_interpret("ssd_scan")
+
+
+def _kernel(x_ref, a_ref, b_ref, c_ref, y_ref, state_out_ref, *,
             n_chunks, chunk):
-    cidx = pl.program_id(1)
+    p = x_ref.shape[-1]
+    n = b_ref.shape[-1]
 
-    @pl.when(cidx == 0)
-    def _init():
-        h_scr[...] = jnp.zeros_like(h_scr)
+    def body(cidx, h_prev):
+        sl = pl.ds(cidx * chunk, chunk)
+        x = x_ref[0, sl, :].astype(jnp.float32)        # (L, P)
+        a = a_ref[0, sl, 0].astype(jnp.float32)        # (L,)
+        B = b_ref[0, sl, :].astype(jnp.float32)        # (L, N)
+        C = c_ref[0, sl, :].astype(jnp.float32)        # (L, N)
 
-    x = x_ref[0].astype(jnp.float32)           # (L, P)
-    a = a_ref[0, :, 0].astype(jnp.float32)     # (L,)
-    B = b_ref[0].astype(jnp.float32)           # (L, N)
-    C = c_ref[0].astype(jnp.float32)           # (L, N)
+        log_a = jnp.log(jnp.maximum(a, 1e-37))
+        cum = jnp.cumsum(log_a)                        # (L,) inclusive
+        # within-chunk decay matrix exp(cum_t - cum_u) for u <= t
+        seg = cum[:, None] - cum[None, :]
+        tri = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1) <= \
+            jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+        decay = jnp.where(tri, jnp.exp(seg), 0.0)
 
-    log_a = jnp.log(jnp.maximum(a, 1e-37))
-    cum = jnp.cumsum(log_a)                    # (L,) inclusive
-    # within-chunk decay matrix exp(cum_t - cum_u) for u <= t
-    seg = cum[:, None] - cum[None, :]
-    tri = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1) <= \
-        jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
-    decay = jnp.where(tri, jnp.exp(seg), 0.0)
+        scores = jax.lax.dot_general(C, B, (((1,), (1,)), ((), ())),
+                                     preferred_element_type=jnp.float32)
+        w = scores * decay                             # (L, L)
+        y = jax.lax.dot(w, x, preferred_element_type=jnp.float32)
 
-    scores = jax.lax.dot_general(C, B, (((1,), (1,)), ((), ())),
+        # inter-chunk from carried state
+        c_in = C * jnp.exp(cum)[:, None]               # (L, N)
+        y += jax.lax.dot_general(c_in, h_prev, (((1,), (1,)), ((), ())),
                                  preferred_element_type=jnp.float32)
-    w = scores * decay                         # (L, L)
-    y = jax.lax.dot(w, x, preferred_element_type=jnp.float32)
 
-    # inter-chunk from carried state
-    h_prev = h_scr[...]                        # (P, N)
-    c_in = C * jnp.exp(cum)[:, None]           # (L, N)
-    y += jax.lax.dot_general(c_in, h_prev, (((1,), (1,)), ((), ())),
-                             preferred_element_type=jnp.float32)
+        # state update
+        decay_to_end = jnp.exp(cum[-1] - cum)          # (L,)
+        b_out = B * decay_to_end[:, None]              # (L, N)
+        h_new = h_prev * jnp.exp(cum[-1]) + jax.lax.dot_general(
+            x, b_out, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        y_ref[0, sl, :] = y.astype(y_ref.dtype)
+        return h_new
 
-    # state update
-    decay_to_end = jnp.exp(cum[-1] - cum)      # (L,)
-    b_out = B * decay_to_end[:, None]          # (L, N)
-    h_new = h_prev * jnp.exp(cum[-1]) + jax.lax.dot_general(
-        x, b_out, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
-    h_scr[...] = h_new
-    y_ref[0] = y.astype(y_ref.dtype)
-
-    @pl.when(cidx == n_chunks - 1)
-    def _finish():
-        state_out_ref[0] = h_new.astype(state_out_ref.dtype)
+    h = jax.lax.fori_loop(0, n_chunks, body,
+                          jnp.zeros((p, n), jnp.float32))
+    state_out_ref[0] = h.astype(state_out_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
-def ssd_scan(x, a, B, C, *, chunk: int = 128, interpret: bool = True):
+def ssd_scan(x, a, B, C, *, chunk: int = 128, interpret: bool | None = None):
     """x: (Bb,S,H,P); a: (Bb,S,H); B,C: (Bb,S,N). Returns (y, final_state).
 
     y: (Bb,S,H,P); final_state: (Bb,H,P,N) float32.
+
+    ``interpret=None`` resolves via :func:`default_interpret` at call time
+    (compiled on TPU/GPU, interpreter on CPU); pass an explicit bool to
+    force either mode (tests cross-check the two).
     """
+    if interpret is None:
+        interpret = default_interpret()
+    return _ssd_scan_jit(x, a, B, C, chunk=chunk, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def _ssd_scan_jit(x, a, B, C, *, chunk: int, interpret: bool):
     bb, s, h, p = x.shape
     n = B.shape[-1]
     chunk = min(chunk, s)
@@ -93,32 +114,30 @@ def ssd_scan(x, a, B, C, *, chunk: int = 128, interpret: bool = True):
     xt = x.transpose(0, 2, 1, 3).reshape(bb * h, sp, p)
     at = a.transpose(0, 2, 1).reshape(bb * h, sp, 1)
 
-    # grid: (batch*head, chunks) -- chunks minor => sequential state carry
-    def xa_map2(g, c):
-        return (g, c, 0)
+    def xa_map(g):
+        return (g, 0, 0)
 
-    def bc_map2(g, c):
-        return (g // h, c, 0)
+    def bc_map(g):
+        return (g // h, 0, 0)
 
     kern = functools.partial(_kernel, n_chunks=n_chunks, chunk=chunk)
     y, state = pl.pallas_call(
         kern,
-        grid=(bb * h, n_chunks),
+        grid=(bb * h,),
         in_specs=[
-            pl.BlockSpec((1, chunk, p), xa_map2),
-            pl.BlockSpec((1, chunk, 1), xa_map2),
-            pl.BlockSpec((1, chunk, n), bc_map2),
-            pl.BlockSpec((1, chunk, n), bc_map2),
+            pl.BlockSpec((1, sp, p), xa_map),
+            pl.BlockSpec((1, sp, 1), xa_map),
+            pl.BlockSpec((1, sp, n), bc_map),
+            pl.BlockSpec((1, sp, n), bc_map),
         ],
         out_specs=[
-            pl.BlockSpec((1, chunk, p), xa_map2),
-            pl.BlockSpec((1, p, n), lambda g, c: (g, 0, 0)),
+            pl.BlockSpec((1, sp, p), xa_map),
+            pl.BlockSpec((1, p, n), xa_map),
         ],
         out_shape=[
             jax.ShapeDtypeStruct((bb * h, sp, p), x.dtype),
             jax.ShapeDtypeStruct((bb * h, p, n), jnp.float32),
         ],
-        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
         interpret=interpret,
     )(xt, at, B, C)
     y = y.reshape(bb, h, sp, p).transpose(0, 2, 1, 3)[:, :s]

@@ -111,14 +111,18 @@ def init_attention(key, cfg: ModelConfig, dtype):
 
 def attention(params, cfg: ModelConfig, x, positions, *, causal=True,
               cache=None, cache_index=None, kv_override=None,
-              return_kv: bool = False, use_pallas: bool = False):
+              return_kv: bool = False, use_pallas: bool = False,
+              valid_len=None):
     """Multi-head attention with GQA + RoPE + optional SWA and KV cache.
 
     cache: None (train/prefill w/o cache) or dict {k, v} with shape
       (B, S_cache, KV, D); decode writes current kv at ``cache_index``.
     kv_override: (k, v) for cross-attention (already projected).
     return_kv: prefill mode -- return the (post-RoPE) KV as a cache (ring
-      layout of window size for SWA archs).
+    layout of window size for SWA archs).
+    valid_len: optional (B,) int -- per-row true sequence length when rows
+      are right-padded to a bucketed S; key positions >= valid_len are
+      masked out so row content is independent of the bucket it landed in.
     Returns (out, new_cache).
     """
     b, s, _ = x.shape
@@ -162,7 +166,8 @@ def attention(params, cfg: ModelConfig, x, positions, *, causal=True,
         new_cache = {"k": ck, "v": cv}
         k, v = ck, cv
 
-    if use_pallas and cache is None and kv_override is None:
+    if use_pallas and cache is None and kv_override is None \
+            and valid_len is None:
         # full-sequence self-attention through the Pallas flash kernel
         # (interpret mode off-TPU); GQA handled inside the kernel's index
         # maps -- kv heads are never materialized n_rep times
@@ -195,7 +200,11 @@ def attention(params, cfg: ModelConfig, x, positions, *, causal=True,
         mask = jnp.ones((1, 1, s, k.shape[1]), dtype=bool)
     else:
         kv_pos = positions
-        mask = make_attention_mask(positions, kv_pos, causal, cfg.sliding_window)
+        kv_valid = None
+        if valid_len is not None:
+            kv_valid = jnp.arange(s)[None, :] < valid_len[:, None]
+        mask = make_attention_mask(positions, kv_pos, causal,
+                                   cfg.sliding_window, kv_valid=kv_valid)
 
     out = attention_scores(q, k, v, mask, cfg.logit_softcap)
     out = matmul(out.reshape(b, s, cfg.q_dim), params["wo"])

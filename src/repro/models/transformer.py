@@ -173,7 +173,8 @@ def init_cache(cfg: ModelConfig, batch: int, cache_len: int, dtype=None,
 
 # ---------------------------------------------------------------- forward
 def _apply_block(cfg: ModelConfig, bp, h, positions, *, causal, cache_b,
-                 cache_index, enc_out, collect_kv=False, use_pallas=False):
+                 cache_index, enc_out, collect_kv=False, use_pallas=False,
+                 valid_len=None):
     aux = {}
     new_cache_b = {} if (cache_b is not None or collect_kv) else None
     for slot in range(block_size(cfg)):
@@ -184,7 +185,8 @@ def _apply_block(cfg: ModelConfig, bp, h, positions, *, causal, cache_b,
         if mixer == "attn":
             out, nc = L.attention(sp["attn"], cfg, hn, positions, causal=causal,
                                   cache=c_slot, cache_index=cache_index,
-                                  return_kv=collect_kv, use_pallas=use_pallas)
+                                  return_kv=collect_kv, use_pallas=use_pallas,
+                                  valid_len=valid_len)
         else:
             out, nc = S.ssm_forward(sp["ssm"], cfg, hn, cache=c_slot,
                                     use_pallas=use_pallas)
@@ -236,11 +238,15 @@ def _run_encoder(params, cfg: ModelConfig, frames, unroll: int = 1):
 def forward(params, cfg: ModelConfig, *, tokens=None, embeds=None, prefix=None,
             frames=None, mode: str = "train", cache=None, cache_index=None,
             t_cond=None, causal: Optional[bool] = None, use_pallas: bool = False,
-            remat: bool = False, unroll: int = 1, block_constraint=None):
+            remat: bool = False, unroll: int = 1, block_constraint=None,
+            valid_len=None):
     """block_constraint: optional pytree (matching one stacked block's param
     subtree) of NamedShardings applied to the block params INSIDE the scan
     body -- ZeRO-3 semantics: FSDP-sharded weights are all-gathered per block
-    just-in-time and freed after (EXPERIMENTS.md §Perf, grok iteration)."""
+    just-in-time and freed after (EXPERIMENTS.md §Perf, grok iteration).
+
+    valid_len: optional (B,) int per-row true length for bucket-padded
+    batches; threaded to attention so padded tail keys are masked out."""
     """Returns dict(logits | eps, cache, aux).
 
     tokens: (B,S) int32; embeds: (B,S,D) continuous input (diffusion mode);
@@ -293,7 +299,7 @@ def forward(params, cfg: ModelConfig, *, tokens=None, embeds=None, prefix=None,
         h, new_cache_b, aux = _apply_block(
             cfg, bp, h, positions, causal=causal, cache_b=cache_b,
             cache_index=cache_index, enc_out=eo, collect_kv=collect_kv,
-            use_pallas=use_pallas)
+            use_pallas=use_pallas, valid_len=valid_len)
         return h, (new_cache_b, aux)
 
     body = jax.checkpoint(body_inner) if remat else body_inner

@@ -99,7 +99,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..configs.base import ModelConfig
-from ..core import get_timesteps, make_plan
+from ..core import cached_make_plan, get_timesteps
 from ..core import sampler as SAMPLER
 from ..core.adaptive import RetirePolicy
 from ..core.plan import (SolverPlan, inert_row, join_rows, pad_plan,
@@ -383,7 +383,8 @@ class DiffusionServeEngine:
                  enforce_deadlines: bool = False,
                  retire: RetirePolicy | None = None,
                  metrics: MetricsRegistry | None = None,
-                 tracer: Tracer | None = None):
+                 tracer: Tracer | None = None,
+                 fused: bool | None = None):
         """``steps_per_tick``: groups advanced per tick (None = all active,
         the PR-2 behavior; an int enables true EDF selection).
         ``aging_ticks``: skipped ticks per +1 effective-priority boost
@@ -404,6 +405,13 @@ class DiffusionServeEngine:
         last edge run at their exact length. Bucketing trades a little
         compute on tail positions for executor reuse: seq 48 and 64 under
         a 64 edge share one (signature, batch, 64) compile-cache entry.
+        Row content is bucket-independent for deterministic solvers: the
+        prior is drawn at the request's TRUE length (zero-padded to the
+        bucket) and a per-row ``lens`` vector masks padded tail keys out
+        of every attention call, so the valid positions never see the
+        tail. (Stochastic per-step solve noise is still drawn at bucket
+        shape, and MoE capacity is still shared with tail tokens -- those
+        rows keep a bucket-shape dependence.)
 
         ``mesh``: a ``jax.sharding.Mesh`` with a data-like axis (e.g.
         :func:`repro.launch.mesh.make_request_mesh`) shards every stacked
@@ -448,10 +456,20 @@ class DiffusionServeEngine:
         ticks/steps/compiles/boundary work; ``None`` builds one over the
         same registry. Instrumentation is host-side only -- nothing here
         syncs the device or touches the jitted step."""
+        """``fused``: route every ``ab``-method plan through the fused
+        Pallas megakernel step (psi/C combination + noise add + error-pair
+        estimate in ONE kernel -- one HBM round-trip instead of r+3).
+        ``None`` (default) enables it whenever the kernel is importable.
+        Off only changes WHICH executor computes a step, never row content
+        across group compositions: stacked fused rows are bitwise identical
+        to solo fused rows (the row-block grid axis computes each row's
+        blocks independently)."""
         assert cfg.objective == "diffusion"
         self.params, self.cfg = params, cfg
         self.sde = sde or VPSDE()
         self.schedule = schedule
+        self.fused = (getattr(SAMPLER, "_fused_ab_step", None) is not None) \
+            if fused is None else bool(fused)
         self.max_group = max_group
         # clamp: 0/negative would make tick() select nothing and busy-loop
         self.steps_per_tick = None if steps_per_tick is None \
@@ -621,7 +639,14 @@ class DiffusionServeEngine:
                 # uniform request across mixed traffic: families without an
                 # embedded pair ignore it (their flag stays False)
                 kw["error_estimate"] = True
-            self._plans[key_] = make_plan(solver, self.sde, ts, **kw)
+            # coefficient construction is memoized process-wide (keyed on
+            # family + schedule fingerprint + grid + kwargs), so admission
+            # of a known (solver, nfe, eta) never re-runs the float64
+            # host precompute
+            plan = cached_make_plan(solver, self.sde, ts, **kw)
+            if self.fused and plan.method == "ab":
+                plan = dataclasses.replace(plan, fused=True)
+            self._plans[key_] = plan
         return self._plans[key_]
 
     # --------------------------------------------------------- executors
@@ -652,13 +677,19 @@ class DiffusionServeEngine:
         self._m_cache_misses.inc()
         cfg = self.cfg
 
-        def run(params, plan_arg, k, st):
-            return SAMPLER.step(plan_arg, k, st, DLM.make_eps_fn(params, cfg))
+        def run(params, plan_arg, k, st, lens):
+            return SAMPLER.step(plan_arg, k, st,
+                                DLM.make_eps_fn(params, cfg, valid_len=lens))
 
         # k is lowered as a PER-ROW (R,) step vector: one trace serves both
         # groups admitted whole (all entries equal -- bitwise identical to a
         # scalar k) and post-join groups whose rows run at their own counts.
+        # lens is the PER-ROW (R,) true-length vector: bucketed rows mask
+        # their padded tail keys out of attention, so sample content is
+        # independent of the bucket the row landed in (full-length rows pass
+        # lens == seq_len, an all-true mask).
         k0 = jnp.zeros((state.x.shape[0],), jnp.int32)
+        lens0 = jnp.full((state.x.shape[0],), state.x.shape[1], jnp.int32)
         t0 = time.perf_counter()
         if self.mesh is None:
             jitted = jax.jit(run)
@@ -668,12 +699,14 @@ class DiffusionServeEngine:
             param_sh = jax.sharding.NamedSharding(
                 self.mesh, jax.sharding.PartitionSpec())
             k_sh = to_shardings(step_index_specs(k0, self.mesh), self.mesh)
+            lens_sh = to_shardings(step_index_specs(lens0, self.mesh),
+                                   self.mesh)
             jitted = jax.jit(run, in_shardings=(param_sh, plan_sh, k_sh,
-                                                state_sh),
+                                                state_sh, lens_sh),
                              out_shardings=state_sh)
         with self.tracer.span("compile"):
             compiled = jitted.lower(self._params_exec, plan, k0,
-                                    state).compile()
+                                    state, lens0).compile()
         compile_s = time.perf_counter() - t0
         self._m_compile_s.inc(compile_s)
         self._compiled[key_] = compiled
@@ -947,7 +980,9 @@ class DiffusionServeEngine:
                 keys = DLM.request_keys(seeds)
                 state = DLM.init_sample_state(
                     self.cfg, plan, keys, seq_len=s_len,
-                    prior_std=self.sde.prior_std())
+                    prior_std=self.sde.prior_std(),
+                    valid_lens=[p.req.seq_len for p in chunk]
+                    + [s_len] * n_fill)
                 fn, compile_s = self._executor(sig, plan, state)
                 plan_sh, state_sh = self._shardings(plan, state)
                 if plan_sh is not None:
@@ -1020,7 +1055,9 @@ class DiffusionServeEngine:
         keys = DLM.request_keys(seeds)
         add_state = DLM.init_sample_state(
             self.cfg, stack_plans(padded), keys, seq_len=g.seq_len,
-            prior_std=self.sde.prior_std())
+            prior_std=self.sde.prior_std(),
+            valid_lens=[p.req.seq_len for p in take]
+            + [g.seq_len] * n_inert)
         g.plan = join_rows(g.plan, padded, shardings=plan_sh)
         g.state = SAMPLER.join_state_rows(g.state, add_state,
                                           shardings=state_sh)
@@ -1179,8 +1216,12 @@ class DiffusionServeEngine:
                 self._m_wasted.inc(sum(
                     r.done and not r.pad for r in g.rows))
                 k_vec = jnp.asarray([g.k - r.k0 for r in g.rows], jnp.int32)
+                lens_vec = jnp.asarray(
+                    [r.req.seq_len if r.req is not None else g.seq_len
+                     for r in g.rows], jnp.int32)
                 t0 = time.perf_counter()
-                g.state = g.fn(self._params_exec, g.plan, k_vec, g.state)
+                g.state = g.fn(self._params_exec, g.plan, k_vec, g.state,
+                               lens_vec)
                 dispatched.append((g, t0))
         for g, t0 in dispatched:
             with self.tracer.span("step_wait"):

@@ -1,0 +1,33 @@
+"""Known-bad RL005 fixture: jitted signatures defaulting interpret=True.
+
+Every site marks ``interpret`` static (so RL002 stays quiet -- the cache
+key is fine); the VALUE is the bug: the default ships the interpreter.
+"""
+import functools
+
+import jax
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def kernel_a(x, interpret=True):
+    return x * 2
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def kernel_b(x, *, interpret: bool = True):
+    return x * 3
+
+
+def kernel_c(x, *, interpret=True):
+    return x * 4
+
+
+def kernel_d(x, interpret=True):
+    return x * 5
+
+
+def build():
+    jitted_c = jax.jit(kernel_c, static_argnames=("interpret",))
+    jitted_d = functools.partial(jax.jit, kernel_d,
+                                 static_argnames=("interpret",))
+    return jitted_c, jitted_d

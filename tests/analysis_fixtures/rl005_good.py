@@ -1,0 +1,26 @@
+"""Known-good RL005 fixture: None-defaulted interpret resolved per kernel,
+explicit False, and an un-jitted helper where a True default is harmless."""
+import functools
+
+import jax
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def kernel_a(x, *, interpret: bool = False):
+    return x * 2
+
+
+def kernel_b(x, *, interpret=None):
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    return _kernel_b_jit(x, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _kernel_b_jit(x, *, interpret: bool):
+    return x * 3
+
+
+def reference_oracle(x, interpret=True):
+    # never jitted: a debugging helper may default to the interpreter
+    return x * 4

@@ -14,7 +14,8 @@ SRC = Path(__file__).resolve().parents[1] / "src"
 # (rule, fixture stem, expected violation count in the known-bad file);
 # counts are exact so a checker that silently stops firing breaks loudly.
 CASES = [("RL001", "rl001", 7), ("RL002", "rl002", 6),
-         ("RL003", "rl003", 4), ("RL004", "rl004", 5)]
+         ("RL003", "rl003", 4), ("RL004", "rl004", 5),
+         ("RL005", "rl005", 4)]
 
 
 @pytest.mark.parametrize("rule,stem,expected", CASES)

@@ -136,6 +136,28 @@ def test_ssd_kernel_matches_xla_chunked():
     np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=2e-4, atol=2e-4)
 
 
+def test_flash_attention_cross_attention_offsets_queries():
+    """sq != sk: query positions must offset by sk - sq so the LAST query
+    aligns with the last key -- a 1-token decode against a 64-entry cache
+    attends (causally) to the whole prefix, not just k_pos == 0."""
+    key = jax.random.PRNGKey(21)
+    ks = jax.random.split(key, 3)
+    for sq, sk, window in [(1, 64, 0), (16, 64, 0), (8, 128, 32)]:
+        q = jax.random.normal(ks[0], (2, sq, 4, 32))
+        k = jax.random.normal(ks[1], (2, sk, 4, 32))
+        v = jax.random.normal(ks[2], (2, sk, 4, 32))
+        got = ops.flash_attention(q, k, v, causal=True, window=window,
+                                  blk_q=32, blk_k=32, interpret=True)
+        want = ref.flash_attention_ref(q, k, v, causal=True, window=window)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5)
+        # the regression this pins: with unshifted query positions a single
+        # decode query would mask everything but k_pos == 0
+        if sq == 1:
+            assert not np.allclose(np.asarray(got), np.asarray(v[:, :1]),
+                                   atol=1e-3)
+
+
 def test_fused_plan_matches_unfused():
     """plan_ab(fused=True) routes Eq. 14 through the Pallas kernel and must
     be numerically identical to the jnp path."""
@@ -211,3 +233,190 @@ def test_deis_step_compiled_is_not_interpreted_speed():
     compiled_t = timed()                    # default: compiled on accelerator
     interp_t = timed(interpret=True)
     assert compiled_t * 10 < interp_t, (compiled_t, interp_t)
+
+
+def test_flash_ssd_default_interpret_is_backend_resolved():
+    """flash_attention and ssd_scan are portable Pallas now (no pltpu
+    scratch): their defaults must resolve per kernel through the shared
+    capability table, exactly like deis_step -- compiled wherever a
+    lowering exists, interpreter only on CPU. Unknown kernel names must
+    fail loudly (a typo would silently interpret everywhere)."""
+    from repro.kernels import runtime
+    from repro.kernels.flash_attention import default_interpret as flash_di
+    from repro.kernels.ssd_scan import default_interpret as ssd_di
+    on_cpu = jax.default_backend() == "cpu"
+    assert flash_di() == on_cpu
+    assert ssd_di() == on_cpu
+    assert runtime.default_interpret("flash_attention") == flash_di()
+    assert runtime.default_interpret("ssd_scan") == ssd_di()
+    with pytest.raises(ValueError):
+        runtime.default_interpret("not_a_kernel")
+
+
+def test_flash_attention_default_matches_explicit_modes():
+    """Default-mode output (backend-resolved) against the forced interpreter
+    and the reference: the compiled lowering is guarded by numerics."""
+    key = jax.random.PRNGKey(13)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (1, 96, 4, 32))
+    k = jax.random.normal(ks[1], (1, 96, 2, 32))
+    v = jax.random.normal(ks[2], (1, 96, 2, 32))
+    got = ops.flash_attention(q, k, v)                   # backend default
+    oracle = ops.flash_attention(q, k, v, interpret=True)
+    want = ref.flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(oracle),
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_ssd_scan_default_matches_explicit_modes():
+    key = jax.random.PRNGKey(17)
+    ks = jax.random.split(key, 4)
+    b, s, h, p, n = 1, 96, 2, 16, 8
+    x = jax.random.normal(ks[0], (b, s, h, p))
+    a = jax.random.uniform(ks[1], (b, s, h), jnp.float32, 0.8, 0.999)
+    B = jax.random.normal(ks[2], (b, s, n))
+    C = jax.random.normal(ks[3], (b, s, n))
+    y, st_ = ops.ssd_scan(x, a, B, C, chunk=32)          # backend default
+    y_o, st_o = ops.ssd_scan(x, a, B, C, chunk=32, interpret=True)
+    y_r, st_r = ref.ssd_scan_ref(x, a, B, C)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_o),
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(st_), np.asarray(st_o),
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_r),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.skipif(jax.default_backend() == "cpu",
+                    reason="perf sanity needs a compiled Pallas lowering "
+                           "(no accelerator in this environment)")
+@pytest.mark.parametrize("kernel", ["flash_attention", "ssd_scan"])
+def test_flash_ssd_compiled_is_not_interpreted_speed(kernel):
+    """On an accelerator the portable lowerings must beat the interpreter by
+    a wide margin -- the regression this guards (TPU-only pltpu shapes +
+    blanket off-TPU interpret) ran these kernels 100x slow on GPU."""
+    import time
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 4)
+    if kernel == "flash_attention":
+        q = jax.random.normal(ks[0], (1, 512, 8, 64))
+        k = jax.random.normal(ks[1], (1, 512, 8, 64))
+        v = jax.random.normal(ks[2], (1, 512, 8, 64))
+
+        def call(**kw):
+            return ops.flash_attention(q, k, v, **kw)
+    else:
+        x = jax.random.normal(ks[0], (1, 512, 4, 32))
+        a = jax.random.uniform(ks[1], (1, 512, 4), jnp.float32, 0.8, 0.999)
+        B = jax.random.normal(ks[2], (1, 512, 32))
+        C = jax.random.normal(ks[3], (1, 512, 32))
+
+        def call(**kw):
+            return ops.ssd_scan(x, a, B, C, **kw)[0]
+
+    def timed(**kw):
+        call(**kw).block_until_ready()                    # warm / compile
+        t0 = time.perf_counter()
+        for _ in range(5):
+            out = call(**kw)
+        out.block_until_ready()
+        return time.perf_counter() - t0
+
+    compiled_t = timed()
+    interp_t = timed(interpret=True)
+    assert compiled_t * 10 < interp_t, (kernel, compiled_t, interp_t)
+
+
+# ------------------------------------------- fused stacked-plan megakernel
+def test_fused_ab_step_folds_noise_and_error():
+    """The stacked kernel's noise add and error-pair estimate against the
+    unfused composition, per row."""
+    from repro.kernels.ops import fused_ab_step
+    key = jax.random.PRNGKey(5)
+    ks = jax.random.split(key, 6)
+    R, m, d, r = 3, 70, 33, 3
+    x = jax.random.normal(ks[0], (R, m, d))
+    hist = jax.random.normal(ks[1], (r, R, m, d))
+    psi = jax.random.uniform(ks[2], (R,), jnp.float32, 0.5, 1.0)
+    C = jax.random.normal(ks[3], (R, r), jnp.float32)
+    s = jax.random.uniform(ks[4], (R,), jnp.float32, 0.0, 0.2)
+    noise = jax.random.normal(ks[5], (R, m, d))
+    E = jax.random.normal(ks[0], (R, r), jnp.float32) * 0.1
+    out, err = fused_ab_step(x, hist, psi, C, s=s, noise=noise,
+                             err_coeffs=E, interpret=True)
+    want = psi[:, None, None] * x + jnp.einsum("rj,jrmd->rmd", C, hist) \
+        + s[:, None, None] * noise
+    want_err = jnp.max(jnp.abs(jnp.einsum("rj,jrmd->rmd", E, hist)),
+                       axis=(1, 2))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(err), np.asarray(want_err),
+                               rtol=1e-5, atol=1e-5)
+    # a stacked row must be BITWISE the corresponding solo (R=1) call: the
+    # row-block grid axis computes each row's blocks independently
+    for i in range(R):
+        out_i, err_i = fused_ab_step(
+            x[i:i + 1], hist[:, i:i + 1], psi[i:i + 1], C[i:i + 1],
+            s=s[i:i + 1], noise=noise[i:i + 1], err_coeffs=E[i:i + 1],
+            interpret=True)
+        assert np.array_equal(np.asarray(out[i]), np.asarray(out_i[0]))
+        assert np.array_equal(np.asarray(err[i]), np.asarray(err_i[0]))
+
+
+_FUSED_FAMILIES = [("tab2", {}), ("tab3", {}), ("sndeis2", {}),
+                   ("seeds2", {}), ("em", {}), ("ddim_eta", {"eta": 0.7})]
+
+
+@pytest.mark.parametrize("name,kw", _FUSED_FAMILIES)
+def test_stacked_fused_bitwise_vs_solo(name, kw):
+    """The serving invariant at the sampler level, per family: a row of a
+    stacked FUSED group is bitwise identical to the same request solved
+    solo through the fused path (deterministic, stochastic s-leaf noise,
+    and nu-weighted sndeis history all ride the same kernel), and the
+    fused path tracks the unfused XLA path to float32 round-off."""
+    import dataclasses as dc
+
+    from repro.core import (VPSDE, get_timesteps, init_state, make_plan,
+                            stack_plans, step)
+    sde = VPSDE()
+    ts = get_timesteps(sde, 6, "quadratic")
+    base = make_plan(name, sde, ts, error_estimate=True, **kw)
+    assert base.method == "ab"
+    fused = dc.replace(base, fused=True)
+
+    def eps_fn(x, t):
+        # stacked solves pass per-row t of shape (R,)
+        if jnp.ndim(t):
+            t = jnp.reshape(t, (-1,) + (1,) * (x.ndim - 1))
+        return jnp.tanh(x) * (1.0 + t)
+
+    R, m, d = 3, 4, 16
+    keys = jnp.stack([jax.random.PRNGKey(100 + i) for i in range(R)])
+    x_rows = [jax.random.normal(jax.random.fold_in(keys[i], 7), (m, d))
+              for i in range(R)]
+
+    def solve(plan, rows):
+        splan = stack_plans([plan] * len(rows))
+        st = init_state(splan, jnp.stack([x_rows[i] for i in rows]),
+                        keys[jnp.asarray(rows)])
+        for k in range(splan.n_steps):
+            st = step(splan, k, st, eps_fn)
+        return st
+
+    group = solve(fused, list(range(R)))
+    for i in range(R):
+        solo = solve(fused, [i])
+        assert np.array_equal(np.asarray(group.x[i]), np.asarray(solo.x[0])), \
+            f"{name}: stacked row {i} != solo"
+        if group.err is not None:
+            assert np.array_equal(np.asarray(group.err[i]),
+                                  np.asarray(solo.err[0]))
+    unfused = solve(base, list(range(R)))
+    np.testing.assert_allclose(np.asarray(group.x), np.asarray(unfused.x),
+                               rtol=1e-4, atol=1e-4)
+    if group.err is not None:
+        np.testing.assert_allclose(np.asarray(group.err),
+                                   np.asarray(unfused.err),
+                                   rtol=1e-3, atol=1e-5)

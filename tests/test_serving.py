@@ -2,6 +2,8 @@
 diffusion service streaming continuous-batching semantics (per-request
 reproducibility, step-boundary admission, compile/solve time split, NFE
 budget accounting, per-step callbacks)."""
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -509,6 +511,23 @@ def test_seq_len_buckets_share_executor(diff_setup):
     assert big.tokens.shape == (24,)
     with pytest.raises(ValueError, match="seq_len_buckets"):
         DiffusionServeEngine(params, cfg, seq_len_buckets=(16, 8))
+
+
+def test_seq_len_bucket_content_matches_unbucketed(diff_setup):
+    """Bucket-independence for deterministic solvers: the prior is drawn at
+    the request's TRUE length and padded tail keys are masked out of every
+    attention call, so a seq-12 request solved in a 16-bucket returns the
+    SAME tokens as the same request solved unbucketed at its exact length
+    (the PR-5 caveat this kills: sample content used to depend on which
+    bucket a request landed in)."""
+    params, cfg = diff_setup
+    req = Request(uid=0, seq_len=12, nfe=4, solver="ddim", seed=9)
+    bucketed = DiffusionServeEngine(params, cfg, seq_len_buckets=(16,))
+    exact = DiffusionServeEngine(params, cfg)
+    got = bucketed.serve([dataclasses.replace(req)])[0]
+    want = exact.serve([dataclasses.replace(req)])[0]
+    assert got.tokens.shape == want.tokens.shape == (12,)
+    np.testing.assert_array_equal(got.tokens, want.tokens)
 
 
 def test_seq_len_bucket_stream_decode_masks_tail(diff_setup):
